@@ -1,0 +1,73 @@
+"""Checkpoint payload benchmarks: full vs delta vs int8-codec bytes, and
+codec throughput (the DESIGN §4.5 numbers)."""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import (CheckpointManager, LocalFSBackend, OpLog, UpperHalf)
+from repro.kernels.ckpt_codec.ref import quantize_ref, dequantize_ref
+
+N = 4_000_000  # 16 MB f32
+
+
+def _upper(rng) -> UpperHalf:
+    up = UpperHalf()
+    up.register("params", "params", {"w": rng.randn(N).astype(np.float32)})
+    up.register("opt_state", "opt_state",
+                {"mu": rng.randn(N).astype(np.float32)})
+    return up
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.RandomState(0)
+
+    # --- codec throughput (numpy host path, the checkpoint writer's) ---
+    x = rng.randn(N).astype(np.float32)
+    t0 = time.monotonic()
+    q, s = quantize_ref(x)
+    enc_s = time.monotonic() - t0
+    t0 = time.monotonic()
+    dequantize_ref(q, s)
+    dec_s = time.monotonic() - t0
+    mb = x.nbytes / 2**20
+    rows.append(("codec/quantize", enc_s * 1e6,
+                 f"{mb/enc_s:.0f}MB/s_ratio={x.nbytes/(q.nbytes+s.nbytes):.2f}x"))
+    rows.append(("codec/dequantize", dec_s * 1e6, f"{mb/dec_s:.0f}MB/s"))
+
+    # --- checkpoint bytes: full vs delta vs delta+int8 ---
+    for label, codec, mutate in [
+        ("full_then_identical", None, 0.0),
+        ("delta_1pct_change", None, 0.01),
+        ("int8_moments", "int8", 0.01),
+    ]:
+        root = tempfile.mkdtemp()
+        try:
+            cbk = {"opt_state": codec} if codec else {}
+            mgr = CheckpointManager(LocalFSBackend(root), async_save=False,
+                                    codec_by_kind=cbk)
+            up = _upper(rng)
+            t0 = time.monotonic()
+            mgr.save(1, up, OpLog())
+            first_s = time.monotonic() - t0
+            first_b = mgr.stats["bytes_written"]
+            if mutate:
+                w = up.get("params")["w"]
+                k = int(len(w) * mutate)
+                w[:k] += 1.0
+            t0 = time.monotonic()
+            mgr.save(2, up, OpLog())
+            second_s = time.monotonic() - t0
+            second_b = mgr.stats["bytes_written"] - first_b
+            rows.append((f"ckpt/{label}/first", first_s * 1e6,
+                         f"bytes={first_b}"))
+            rows.append((f"ckpt/{label}/second", second_s * 1e6,
+                         f"bytes={second_b}_saving="
+                         f"{(1 - second_b / max(first_b, 1)) * 100:.0f}%"))
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+    return rows

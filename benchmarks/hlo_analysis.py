@@ -1,0 +1,5 @@
+"""Re-export: canonical analyzer lives in repro.launch.hlo_analysis."""
+from repro.launch.hlo_analysis import (  # noqa: F401
+    analyze_hlo, roofline_terms, RooflineCounts, parse_hlo,
+    PEAK_FLOPS, HBM_BW, ICI_BW, shape_bytes,
+)

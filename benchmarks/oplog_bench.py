@@ -1,0 +1,56 @@
+"""Record-prune-replay (paper §VI): log size and replay cost, pruned vs
+unpruned, as the run gets longer."""
+from __future__ import annotations
+
+import time
+
+from repro.core import LowerHalf, OpLog
+from repro.core.oplog import (CacheAlloc, CacheFree, Compile, DataAdvance,
+                              ScheduleSet)
+from repro.core.virtual_ids import VirtualId
+
+
+class NullRuntime:
+    def apply_op(self, op):
+        pass
+
+
+def _mk_log(steps: int) -> OpLog:
+    log = OpLog()
+    log.append(Compile, vexec=VirtualId("exec", 1), fn_name="train_step",
+               arch="a", shape_key="s", plan_key="")
+    for i in range(steps):
+        log.append(DataAdvance, n=1)
+        if i % 100 == 0:
+            log.append(ScheduleSet, key="lr_scale", value=1.0 - i * 1e-5)
+        if i % 50 == 0:
+            v = VirtualId("cache", 10 + i)
+            log.append(CacheAlloc, vcache=v, arch="a", batch=1, max_seq=8)
+            log.append(CacheFree, vcache=v)
+    return log
+
+
+def run() -> list:
+    rows = []
+    for steps in (1_000, 10_000, 100_000):
+        log = _mk_log(steps)
+        t0 = time.monotonic()
+        pruned = log.prune()
+        prune_s = time.monotonic() - t0
+
+        t0 = time.monotonic()
+        log.replay(NullRuntime())
+        full_replay = time.monotonic() - t0
+        t0 = time.monotonic()
+        pruned.replay(NullRuntime())
+        pruned_replay = time.monotonic() - t0
+
+        json_full = len(log.to_json())
+        json_pruned = len(pruned.to_json())
+        rows.append((f"oplog/{steps}_steps/replay_full",
+                     full_replay * 1e6, f"ops={len(log)}"))
+        rows.append((f"oplog/{steps}_steps/replay_pruned",
+                     pruned_replay * 1e6,
+                     f"ops={len(pruned)}_bytes={json_pruned}vs{json_full}"
+                     f"_prune_time={prune_s*1e3:.1f}ms"))
+    return rows

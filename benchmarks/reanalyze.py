@@ -1,0 +1,54 @@
+"""Recompute roofline terms for existing dry-run cells from their saved
+HLO (benchmarks/results/hlo/), applying the current analyzer. Keeps
+compile-time artifacts; only the analysis fields are refreshed."""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def reanalyze(pattern: str = "*") -> int:
+    n = 0
+    for hlo_path in glob.glob(str(RESULTS / "hlo" / "*" / f"{pattern}.txt.gz")):
+        hlo_path = Path(hlo_path)
+        mesh = hlo_path.parent.name
+        cell = hlo_path.name[:-len(".txt.gz")]
+        json_path = RESULTS / "dryrun" / mesh / f"{cell}.json"
+        if not json_path.exists():
+            continue
+        r = json.loads(json_path.read_text())
+        counts = analyze_hlo(gzip.open(hlo_path, "rt").read())
+        r["roofline"] = roofline_terms(counts)
+        r["roofline_kernel_adjusted"] = roofline_terms(
+            counts, kernel_adjusted=True)
+        r["parsed"].update(
+            flops_per_chip=counts.flops,
+            hbm_bytes_per_chip=counts.hbm_bytes,
+            collective_bytes_per_chip=counts.collective_bytes,
+            collective_breakdown=counts.collective_breakdown,
+            n_collectives=counts.n_collectives,
+        )
+        r["fused_loops"] = [
+            {"trips": lp.trips, "raw_gb": round(lp.raw_hbm / 2**30, 2),
+             "stream_gb": round(lp.stream_hbm / 2**30, 2)}
+            for lp in counts.loops if lp.fusable]
+        if r["parsed"]["flops_per_chip"]:
+            r["useful_flops_ratio"] = (
+                r["model_flops_per_chip"] / r["parsed"]["flops_per_chip"])
+        json_path.write_text(json.dumps(r, indent=1))
+        n += 1
+        print(f"reanalyzed {mesh}/{cell}")
+    return n
+
+
+if __name__ == "__main__":
+    reanalyze(sys.argv[1] if len(sys.argv) > 1 else "*")

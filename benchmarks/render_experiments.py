@@ -1,0 +1,73 @@
+"""Render the §Roofline table and multi-pod notes into EXPERIMENTS.md
+from the dry-run artifacts (idempotent: replaces the marker sections)."""
+from __future__ import annotations
+
+import glob
+import json
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+RESULTS = REPO / "benchmarks" / "results" / "dryrun"
+
+
+def load(mesh, tag=""):
+    rows = []
+    for f in sorted(glob.glob(str(RESULTS / mesh / "*.json"))):
+        r = json.load(open(f))
+        if r.get("tag", "") != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r):
+    t = r["roofline"]
+    tk = r.get("roofline_kernel_adjusted", t)
+    live = r["memory"]["live_bytes"] / 2**30
+    return (f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} "
+            f"| {t['memory_s']:.3f} | {t['collective_s']:.3f} "
+            f"| {t['dominant'][:4]} | {tk['memory_s']:.3f} "
+            f"| {tk['dominant'][:4]} | {tk['roofline_fraction']:.2f} "
+            f"| {r['useful_flops_ratio']:.2f} | {live:.1f} "
+            f"| {'Y' if live < 15.7 else 'over'} |")
+
+
+HDR = ("| arch | shape | compute_s | mem_s (jnp) | coll_s | dom "
+       "| mem_s (kernel) | dom(k) | frac(k) | useful | GiB/chip | fits |\n"
+       "|---|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def render():
+    md = (REPO / "EXPERIMENTS.md").read_text()
+
+    table = [HDR]
+    for r in load("single"):
+        table.append(fmt_row(r))
+    roof = "\n".join(table)
+    roof += (
+        "\n\nColumns: raw terms from the compiled HLO (jnp attention "
+        "path); `mem_s (kernel)` / `dom(k)` / `frac(k)` apply the "
+        "kernel-adjusted memory term (§method note 4). `fits` compares "
+        "live bytes (args+temps, donation-aliased) to 16 GiB v5e HBM. "
+        "kimi-k2 exceeds single-pod HBM statically (params+opt "
+        "16.4 GiB/chip) — see §Multi-pod.\n")
+
+    mp = [HDR]
+    for r in load("multi"):
+        mp.append(fmt_row(r))
+    mp_txt = ("All 32 cells on the 512-chip mesh:\n\n" + "\n".join(mp) + "\n")
+
+    md = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n## )",
+                "<!-- ROOFLINE_TABLE -->\n" + roof + "\n",
+                md, flags=re.S)
+    md = re.sub(r"<!-- MULTIPOD_NOTES -->.*$",
+                "<!-- MULTIPOD_NOTES -->\n" + mp_txt,
+                md, flags=re.S)
+    (REPO / "EXPERIMENTS.md").write_text(md)
+    print(f"rendered {len(table)-1} single + {len(mp)-1} multi rows")
+
+
+if __name__ == "__main__":
+    render()

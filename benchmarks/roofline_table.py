@@ -1,0 +1,50 @@
+"""Aggregate the dry-run artifacts into the roofline table (§Roofline).
+Reads benchmarks/results/dryrun/*/*.json (produced by
+repro.launch.dryrun); emits one row per (arch, shape, mesh, tag)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "single", tag: str = ""):
+    out = []
+    for f in sorted(glob.glob(str(RESULTS / mesh / "*.json"))):
+        r = json.load(open(f))
+        if r.get("tag", "") != tag:
+            continue
+        out.append(r)
+    return out
+
+
+def run() -> list:
+    rows = []
+    for mesh in ("single", "multi"):
+        for r in load_cells(mesh):
+            t = r["roofline"]
+            name = f"roofline/{mesh}/{r['arch']}/{r['shape']}"
+            derived = (f"dom={t['dominant']}"
+                       f"_comp={t['compute_s']:.4f}s"
+                       f"_mem={t['memory_s']:.4f}s"
+                       f"_coll={t['collective_s']:.4f}s"
+                       f"_frac={t['roofline_fraction']:.2f}"
+                       f"_useful={r['useful_flops_ratio']:.2f}"
+                       f"_live={r['memory']['live_bytes']/2**30:.1f}GiB")
+            rows.append((name, t["bound_s"] * 1e6, derived))
+        # perf-variant tags
+        for f in sorted(glob.glob(str(RESULTS / mesh / "*__*__*.json"))):
+            r = json.load(open(f))
+            if not r.get("tag"):
+                continue
+            t = r["roofline"]
+            name = f"roofline/{mesh}/{r['arch']}/{r['shape']}@{r['tag']}"
+            rows.append((name, t["bound_s"] * 1e6,
+                         f"dom={t['dominant']}"
+                         f"_frac={t['roofline_fraction']:.2f}"
+                         f"_coll={t['collective_s']:.4f}s"
+                         f"_mem={t['memory_s']:.4f}s"))
+    return rows

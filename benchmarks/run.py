@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  restart_speed   — Fig 2: cold start vs C/R restart (Maya 60s -> 4s)
+  overhead        — Fig 3: interception overhead (glxgears 8%)
+  oplog_bench     — §VI record-prune-replay: log size / replay cost
+  ckpt_codec_bench— DESIGN §4.5: delta + int8 checkpoint payloads
+  roofline_table  — §Roofline: aggregated dry-run terms (reads
+                    benchmarks/results/dryrun; run repro.launch.dryrun
+                    first — missing cells simply produce no rows)
+
+Prints ``name,us_per_call,derived`` CSV. Select suites with
+``python -m benchmarks.run [suite ...]``.
+"""
+import sys
+
+
+def main() -> None:
+    from benchmarks import (ckpt_codec_bench, oplog_bench, overhead,
+                            restart_speed, roofline_table)
+    suites = {
+        "restart_speed": restart_speed.run,
+        "overhead": overhead.run,
+        "oplog": oplog_bench.run,
+        "ckpt_codec": ckpt_codec_bench.run,
+        "roofline": roofline_table.run,
+    }
+    want = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in want:
+        try:
+            for row in suites[name]():
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # keep the harness honest but resilient
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    if failures:
+        print(f"FAILED suites: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

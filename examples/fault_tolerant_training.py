@@ -1,0 +1,77 @@
+"""The paper's Maya demo (§IV) as a training job: periodic background
+checkpoints, a crash, a restore into a *fresh lower half* (new mesh, replay
+recompiles the step), and a bitwise-identical continuation — plus the
+cold-start vs restart timing comparison (Fig. 2).
+
+    PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import CheckpointManager, LocalFSBackend
+from repro.core.failure import FailurePolicy, FailureAction
+from repro.train.loop import Trainer, TrainJob
+
+STEPS_BEFORE_CRASH = 6
+TOTAL_STEPS = 12
+
+
+def main() -> None:
+    root = tempfile.mkdtemp(prefix="repro_ft_")
+    job = TrainJob(arch="phi4-mini-3.8b-smoke", shape_key="train_s32_b4")
+    mgr = CheckpointManager(LocalFSBackend(root), async_save=True,
+                            keep_last=2)
+
+    # ---------- reference run (no crash) ----------
+    ref = Trainer(job, (1, 1), ("data", "model"))
+    ref.init_state()
+    for _ in range(TOTAL_STEPS):
+        ref.train_steps(1)
+    ref_digest = ref.params_digest()
+
+    # ---------- run with a crash ----------
+    t_cold0 = time.monotonic()
+    tr = Trainer(job, (1, 1), ("data", "model"), manager=mgr)
+    tr.init_state()
+    for s in range(STEPS_BEFORE_CRASH):
+        m = tr.train_steps(1)
+        if (s + 1) % 3 == 0:
+            tr.save(block=False)
+            print(f"[run] step {s+1} loss={m['loss']:.4f}  "
+                  f"(background checkpoint)")
+    mgr.wait()
+    cold_start_s = time.monotonic() - t_cold0
+    print(f"[run] CRASH simulated at step {STEPS_BEFORE_CRASH} "
+          f"(lower half destroyed: mesh, executables, device buffers)")
+    del tr
+
+    # ---------- failure policy decides ----------
+    policy = FailurePolicy(spares=[], allow_shrink=False)
+    action, info = policy.decide(dead=[0], world=[0])
+    assert action == FailureAction.RESTART_LAST_CKPT
+    print(f"[policy] {action.value}")
+
+    # ---------- restore: fresh lower half + replay + rebind ----------
+    t0 = time.monotonic()
+    tr2 = Trainer.restore(mgr)
+    restore_s = time.monotonic() - t0
+    start = int(tr2.upper.get("step"))
+    print(f"[restore] resumed at step {start} in {restore_s:.2f}s "
+          f"(cold start took {cold_start_s:.2f}s -> "
+          f"{cold_start_s / restore_s:.1f}x; paper: 60s -> 4s = 15x)")
+    print(f"[restore] op-log replayed: {len(tr2.lower.oplog)} ops "
+          f"(pruned from the run's full history at save time)")
+
+    for _ in range(TOTAL_STEPS - start):
+        m = tr2.train_steps(1)
+    print(f"[cont] final loss={m['loss']:.4f}")
+
+    assert tr2.params_digest() == ref_digest, "continuation diverged!"
+    print("[check] BITWISE-IDENTICAL to the uninterrupted run — "
+          "transparent checkpointing works end to end.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: train a small model under the C/R runtime, checkpoint,
+and print losses.
+
+    PYTHONPATH=src python examples/quickstart.py --arch qwen2.5-32b-smoke
+"""
+import argparse
+import tempfile
+
+from repro.core import CheckpointManager, LocalFSBackend
+from repro.train.loop import Trainer, TrainJob
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-32b-smoke",
+                    help="registry id or '<id>-smoke'")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--ckpt-every", type=int, default=5)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    root = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ckpt_")
+    mgr = CheckpointManager(LocalFSBackend(root), async_save=True,
+                            keep_last=3)
+    job = TrainJob(arch=args.arch, shape_key="train_s32_b4")
+    tr = Trainer(job, (1, 1), ("data", "model"), manager=mgr)
+    tr.init_state()
+    print(f"arch={args.arch} params checkpointing to {root}")
+
+    for step in range(args.steps):
+        m = tr.train_steps(1)
+        print(f"step {m['step']:4.0f} loss {m['loss']:.4f} "
+              f"lr {m['lr']:.2e} |g| {m['grad_norm']:.3f}")
+        if (step + 1) % args.ckpt_every == 0:
+            tr.save(block=False)          # async background snapshot
+            print(f"  checkpoint @ step {int(tr.upper.get('step'))} "
+                  f"(async)")
+    mgr.wait()
+    print(f"done; checkpoints at steps {mgr.backend.list_steps()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+from repro.configs.base import (
+    ModelConfig,
+    ShapeConfig,
+    ALL_SHAPES,
+    SHAPES_BY_NAME,
+    shapes_for,
+)
+from repro.configs.registry import (
+    ARCH_IDS,
+    all_cells,
+    all_configs,
+    get_config,
+    get_shape,
+    get_smoke_config,
+    skipped_cells,
+)

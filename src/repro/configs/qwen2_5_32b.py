@@ -1,0 +1,38 @@
+"""Qwen2.5-32B — dense LM, GQA with QKV bias.
+
+[dense] 64L d_model=5120 40H (GQA kv=8) d_ff=27648 vocab=152064
+[hf:Qwen/Qwen2.5-0.5B; hf]
+"""
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "qwen2.5-32b"
+
+CONFIG = ModelConfig(
+    name=ARCH_ID,
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=27648,
+    vocab_size=152064,
+    head_dim=128,
+    qkv_bias=True,
+    act="silu",
+    norm="rmsnorm",
+    rope_theta=1_000_000.0,
+    source="hf:Qwen/Qwen2.5-32B",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(
+        name=ARCH_ID + "-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+    )

@@ -1,0 +1,18 @@
+"""Core: split-state transparent checkpoint/restart (the paper's
+contribution). See DESIGN.md §4."""
+from repro.core.virtual_ids import VirtualId, HandleTable, DeviceMap, StaleHandleError
+from repro.core.oplog import (
+    OpLog, MeshCreate, Compile, CacheAlloc, CacheFree, DataAdvance,
+    DataReassign, ScheduleSet,
+)
+from repro.core.split_state import (
+    UpperHalf, LowerHalf, StateEntry, register_step_fn, FUNCTION_REGISTRY,
+    fill_like, flatten_with_paths,
+)
+from repro.core.checkpoint import CheckpointManager, RestoredState
+from repro.core.restore import fresh_lower_half, materialize_entry
+from repro.core.backends import make_backend, LocalFSBackend, ShardedBackend
+from repro.core.failure import (
+    HeartbeatMonitor, StragglerDetector, FailurePolicy, FailureAction,
+    rebalance_shards,
+)

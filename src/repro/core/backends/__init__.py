@@ -1,0 +1,9 @@
+from repro.core.backends.base import CheckpointBackend
+from repro.core.backends.localfs import LocalFSBackend
+from repro.core.backends.sharded import ShardedBackend
+
+BACKENDS = {"localfs": LocalFSBackend, "sharded": ShardedBackend}
+
+
+def make_backend(kind: str, root: str, **kw) -> CheckpointBackend:
+    return BACKENDS[kind](root, **kw)

@@ -1,0 +1,57 @@
+"""CheckpointBackend ABC — the package-agnostic boundary (paper §II/§V).
+
+Everything above this interface (split halves, op-log, virtual ids, delta
+encoding, codecs) is shared between backends, which is the paper's
+agnosticism claim: the same core ran under both CRIU and DMTCP. Here the
+two backends are LocalFSBackend (CRIU-analogue: one monolithic image
+directory per checkpoint) and ShardedBackend (DMTCP-analogue: coordinator
+manifest + per-host shard files + optional peer replication).
+
+Blobs are content-addressed at the delta layer; a backend only needs
+put/get/commit semantics with an atomic manifest commit.
+"""
+from __future__ import annotations
+
+import abc
+import json
+from typing import Any, Dict, List, Optional
+
+
+class CheckpointBackend(abc.ABC):
+    @abc.abstractmethod
+    def put_blob(self, name: str, data: bytes) -> None:
+        """Store a blob (idempotent by name; content-addressed names)."""
+
+    @abc.abstractmethod
+    def get_blob(self, name: str) -> bytes:
+        ...
+
+    @abc.abstractmethod
+    def has_blob(self, name: str) -> bool:
+        ...
+
+    @abc.abstractmethod
+    def commit_manifest(self, step: int, manifest: Dict[str, Any]) -> None:
+        """Atomically publish a checkpoint at `step`. A checkpoint is
+        visible iff its manifest committed; partial blob writes are
+        harmless garbage."""
+
+    @abc.abstractmethod
+    def get_manifest(self, step: int) -> Dict[str, Any]:
+        ...
+
+    @abc.abstractmethod
+    def list_steps(self) -> List[int]:
+        ...
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return max(steps) if steps else None
+
+    @abc.abstractmethod
+    def delete_step(self, step: int) -> None:
+        """Remove a manifest (blob GC handled separately)."""
+
+    @abc.abstractmethod
+    def gc_blobs(self, referenced: set) -> int:
+        """Delete blobs not in `referenced`; returns count removed."""

@@ -1,0 +1,86 @@
+"""LocalFSBackend — the CRIU-analogue.
+
+One image directory; blobs under blobs/ (content-addressed, shared across
+steps, which is what makes delta checkpoints cheap); manifests committed
+by atomic rename — the equivalent of CRIU's complete-image-or-nothing
+semantics.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, List
+
+from repro.core.backends.base import CheckpointBackend
+
+
+class LocalFSBackend(CheckpointBackend):
+    def __init__(self, root: str) -> None:
+        self.root = Path(root)
+        (self.root / "blobs").mkdir(parents=True, exist_ok=True)
+        (self.root / "manifests").mkdir(parents=True, exist_ok=True)
+
+    # --- blobs ---------------------------------------------------------
+
+    def _blob_path(self, name: str) -> Path:
+        # two-level fanout to keep directories small at scale
+        return self.root / "blobs" / name[:2] / name
+
+    def put_blob(self, name: str, data: bytes) -> None:
+        p = self._blob_path(name)
+        if p.exists():
+            return  # content-addressed: identical by construction
+        p.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=p.parent, prefix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.rename(tmp, p)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def get_blob(self, name: str) -> bytes:
+        return self._blob_path(name).read_bytes()
+
+    def has_blob(self, name: str) -> bool:
+        return self._blob_path(name).exists()
+
+    # --- manifests -----------------------------------------------------
+
+    def _manifest_path(self, step: int) -> Path:
+        return self.root / "manifests" / f"step_{step:012d}.json"
+
+    def commit_manifest(self, step: int, manifest: Dict[str, Any]) -> None:
+        p = self._manifest_path(step)
+        fd, tmp = tempfile.mkstemp(dir=p.parent, prefix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, p)  # atomic publish
+
+    def get_manifest(self, step: int) -> Dict[str, Any]:
+        return json.loads(self._manifest_path(step).read_text())
+
+    def list_steps(self) -> List[int]:
+        out = []
+        for p in (self.root / "manifests").glob("step_*.json"):
+            out.append(int(p.stem.split("_")[1]))
+        return sorted(out)
+
+    def delete_step(self, step: int) -> None:
+        p = self._manifest_path(step)
+        if p.exists():
+            p.unlink()
+
+    def gc_blobs(self, referenced: set) -> int:
+        n = 0
+        for p in (self.root / "blobs").glob("*/*"):
+            if p.name not in referenced:
+                p.unlink()
+                n += 1
+        return n

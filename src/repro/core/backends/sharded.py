@@ -1,0 +1,139 @@
+"""ShardedBackend — the DMTCP-analogue.
+
+DMTCP writes one checkpoint file per rank, coordinated by a central
+coordinator that publishes completion. Here: blobs are hashed to N
+virtual hosts; each host owns a directory and writes its blobs in
+parallel (thread pool standing in for per-host writers); the coordinator
+commits the manifest only after every host's writes land. Optional peer
+replication keeps each blob *also* on host (h+1) % N so a single-host
+loss restores without the primary (core.replication drives the failure
+injection).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from concurrent.futures import ThreadPoolExecutor, wait
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+from repro.core.backends.base import CheckpointBackend
+
+
+def _host_of(name: str, n_hosts: int) -> int:
+    # stable fnv-1a over the blob name
+    h = 2166136261
+    for ch in name.encode():
+        h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+    return h % n_hosts
+
+
+class ShardedBackend(CheckpointBackend):
+    def __init__(self, root: str, n_hosts: int = 4, replicate: bool = False,
+                 writers: int = 4) -> None:
+        self.root = Path(root)
+        self.n_hosts = n_hosts
+        self.replicate = replicate
+        self._pool = ThreadPoolExecutor(max_workers=writers)
+        self._failed_hosts: set = set()  # failure injection for tests
+        for h in range(n_hosts):
+            (self.root / f"host_{h:03d}").mkdir(parents=True, exist_ok=True)
+        (self.root / "coordinator").mkdir(parents=True, exist_ok=True)
+
+    # --- failure injection ----------------------------------------------
+
+    def fail_host(self, h: int) -> None:
+        self._failed_hosts.add(h)
+
+    def heal_host(self, h: int) -> None:
+        self._failed_hosts.discard(h)
+
+    # --- blobs -----------------------------------------------------------
+
+    def _paths(self, name: str) -> List[Path]:
+        h = _host_of(name, self.n_hosts)
+        paths = [self.root / f"host_{h:03d}" / name]
+        if self.replicate:
+            r = (h + 1) % self.n_hosts
+            paths.append(self.root / f"host_{r:03d}" / f"replica_{name}")
+        return paths
+
+    def _write(self, path: Path, data: bytes) -> None:
+        if path.exists():
+            return
+        fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.rename(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def put_blob(self, name: str, data: bytes) -> None:
+        futures = [self._pool.submit(self._write, p, data)
+                   for p in self._paths(name)]
+        done, _ = wait(futures)
+        for f in done:
+            f.result()
+
+    def get_blob(self, name: str) -> bytes:
+        primary_host = _host_of(name, self.n_hosts)
+        errors = []
+        for i, p in enumerate(self._paths(name)):
+            host = primary_host if i == 0 else (primary_host + 1) % self.n_hosts
+            if host in self._failed_hosts:
+                errors.append(f"host {host} down")
+                continue
+            if p.exists():
+                return p.read_bytes()
+            errors.append(f"{p} missing")
+        raise FileNotFoundError(f"blob {name}: {'; '.join(errors)}")
+
+    def has_blob(self, name: str) -> bool:
+        primary_host = _host_of(name, self.n_hosts)
+        for i, p in enumerate(self._paths(name)):
+            host = primary_host if i == 0 else (primary_host + 1) % self.n_hosts
+            if host not in self._failed_hosts and p.exists():
+                return True
+        return False
+
+    # --- coordinator manifests --------------------------------------------
+
+    def _manifest_path(self, step: int) -> Path:
+        return self.root / "coordinator" / f"step_{step:012d}.json"
+
+    def commit_manifest(self, step: int, manifest: Dict[str, Any]) -> None:
+        p = self._manifest_path(step)
+        fd, tmp = tempfile.mkstemp(dir=p.parent, prefix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, p)
+
+    def get_manifest(self, step: int) -> Dict[str, Any]:
+        return json.loads(self._manifest_path(step).read_text())
+
+    def list_steps(self) -> List[int]:
+        return sorted(int(p.stem.split("_")[1])
+                      for p in (self.root / "coordinator").glob("step_*.json"))
+
+    def delete_step(self, step: int) -> None:
+        p = self._manifest_path(step)
+        if p.exists():
+            p.unlink()
+
+    def gc_blobs(self, referenced: set) -> int:
+        n = 0
+        for h in range(self.n_hosts):
+            for p in (self.root / f"host_{h:03d}").iterdir():
+                name = p.name
+                if name.startswith("replica_"):
+                    name = name[len("replica_"):]
+                if name not in referenced:
+                    p.unlink()
+                    n += 1
+        return n

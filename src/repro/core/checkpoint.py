@@ -1,0 +1,151 @@
+"""CheckpointManager: periodic, asynchronous, atomic snapshots of the
+upper half (paper §I: "taking periodic snapshots of the editor program in
+the background").
+
+Save path:
+  1. (caller thread, blocking, fast) pull upper-half tensors to host —
+     the only step that must pause the step loop;
+  2. (background thread) codec + chunk + content-addressed blob writes
+     (delta vs whatever already exists) through the backend;
+  3. atomic manifest commit — a checkpoint exists iff its manifest does.
+
+The manifest bundles the PRUNED op-log (record-prune-replay) and the
+upper-half structure (leaf paths, dtypes, logical sharding axes), which is
+everything restore needs on any topology.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.core.backends.base import CheckpointBackend
+from repro.core.delta import (serialize_tensor, deserialize_tensor,
+                              referenced_hashes)
+from repro.core.oplog import OpLog
+from repro.core.split_state import UpperHalf
+
+
+@dataclass
+class RestoredState:
+    step: int
+    manifest: Dict[str, Any]
+    # entry -> leaf path -> np.ndarray
+    entries: Dict[str, Dict[str, np.ndarray]]
+    oplog: OpLog
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        backend: CheckpointBackend,
+        *,
+        codec_by_kind: Optional[Dict[str, str]] = None,
+        async_save: bool = True,
+        keep_last: Optional[int] = None,
+        prune_oplog: bool = True,
+    ) -> None:
+        self.backend = backend
+        # e.g. {"opt_state": "int8"} — moments tolerate quantization
+        self.codec_by_kind = codec_by_kind or {}
+        self.async_save = async_save
+        self.keep_last = keep_last
+        self.prune_oplog = prune_oplog
+        self._pool = ThreadPoolExecutor(max_workers=1)  # ordered commits
+        self._pending: Optional[Future] = None
+        self.stats: Dict[str, Any] = {"saves": 0, "bytes_written": 0,
+                                      "bytes_logical": 0, "save_seconds": 0.0}
+
+    # --- save -------------------------------------------------------------
+
+    def save(self, step: int, upper: UpperHalf, oplog: OpLog,
+             block: bool = False,
+             job_meta: Optional[Dict[str, Any]] = None) -> Optional[Future]:
+        t0 = time.monotonic()
+        host_state = upper.to_host()          # snapshot point (blocking)
+        structure = upper.structure()
+        kinds = {name: e.kind for name, e in upper.items()}
+        log = oplog.prune() if self.prune_oplog else oplog
+        log_json = log.to_json()
+        snapshot_s = time.monotonic() - t0
+
+        def _write() -> int:
+            t1 = time.monotonic()
+            entries_manifest: Dict[str, Any] = {}
+            written = logical = 0
+            for name, leaves in host_state.items():
+                codec = self.codec_by_kind.get(kinds[name])
+                leaf_metas = {}
+                for path, arr in leaves.items():
+                    m = serialize_tensor(
+                        arr, self.backend.put_blob, self.backend.has_blob,
+                        codec=codec)
+                    written += m.pop("bytes_written", 0)
+                    logical += arr.nbytes
+                    leaf_metas[path] = m
+                entries_manifest[name] = {"kind": kinds[name],
+                                          "leaves": leaf_metas}
+            manifest = {
+                "step": step,
+                "entries": entries_manifest,
+                "oplog": log_json,
+                "structure": structure,
+                "job": job_meta or {},
+                "format": 1,
+            }
+            self.backend.commit_manifest(step, manifest)
+            self.stats["saves"] += 1
+            self.stats["bytes_written"] += written
+            self.stats["bytes_logical"] += logical
+            self.stats["save_seconds"] += snapshot_s + (time.monotonic() - t1)
+            if self.keep_last is not None:
+                self._gc(self.keep_last)
+            return written
+
+        if self.async_save and not block:
+            self.wait()                        # keep at most one in flight
+            self._pending = self._pool.submit(_write)
+            return self._pending
+        _write()
+        return None
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    # --- restore ------------------------------------------------------------
+
+    def restore(self, step: Optional[int] = None) -> RestoredState:
+        self.wait()
+        if step is None:
+            step = self.backend.latest_step()
+            if step is None:
+                raise FileNotFoundError("no committed checkpoints")
+        manifest = self.backend.get_manifest(step)
+        entries: Dict[str, Dict[str, np.ndarray]] = {}
+        for name, e in manifest["entries"].items():
+            entries[name] = {
+                path: deserialize_tensor(meta, self.backend.get_blob)
+                for path, meta in e["leaves"].items()
+            }
+        oplog = OpLog.from_json(manifest["oplog"])
+        return RestoredState(step=step, manifest=manifest, entries=entries,
+                             oplog=oplog)
+
+    # --- gc -------------------------------------------------------------------
+
+    def _gc(self, keep_last: int) -> None:
+        steps = self.backend.list_steps()
+        drop = steps[:-keep_last] if keep_last > 0 else []
+        for s in drop:
+            self.backend.delete_step(s)
+        referenced = set()
+        for s in self.backend.list_steps():
+            referenced |= referenced_hashes(self.backend.get_manifest(s))
+        self.backend.gc_blobs(referenced)

@@ -1,0 +1,104 @@
+"""Restore protocol (paper §II-III): fresh lower half + log replay +
+upper-half rebinding, with elastic resharding.
+
+Sequence (mirrors the paper's restart exactly):
+  1. construct a fresh LowerHalf — the 'load a fresh copy of OpenGL'
+     moment. An elastic restore passes a mesh_factory for the *new*
+     topology; the logged MeshCreate then binds the replacement mesh to
+     the same virtual mesh id.
+  2. replay the (pruned) op-log: recompiles step functions, re-allocates
+     caches, fast-forwards the data assignment — rebuilding driver state.
+  3. materialize the upper half: every leaf is device_put with a
+     NamedSharding derived from its *logical* axes and the new mesh's
+     plan. Because nothing in the payload references physical devices,
+     the same checkpoint lands on 512 chips, 256 chips, or 1 CPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.checkpoint import CheckpointManager, RestoredState
+from repro.core.split_state import LowerHalf, UpperHalf, fill_like, flatten_with_paths
+from repro.parallel.sharding import ParallelPlan, spec_for_axes
+from jax.sharding import NamedSharding, PartitionSpec
+
+
+def fresh_lower_half(restored: RestoredState,
+                     mesh_factory: Optional[Callable] = None) -> LowerHalf:
+    """Steps 1-2: fresh runtime, replay the log."""
+    lower = LowerHalf(mesh_factory=mesh_factory)
+    restored.oplog.replay(lower)
+    # the replayed ops become the new incarnation's log (so a subsequent
+    # checkpoint of this incarnation carries the full history forward)
+    lower.oplog = restored.oplog
+    return lower
+
+
+def materialize_entry(
+    restored: RestoredState,
+    name: str,
+    template,
+    plan: Optional[ParallelPlan],
+    mesh,
+    logical_template=None,
+):
+    """Step 3 for one entry: path-matched leaves -> sharded device arrays.
+
+    template: abstract pytree (ShapeDtypeStructs or arrays) giving
+    structure + dtypes; logical_template: matching pytree of logical axis
+    tuples (None leaves -> replicated)."""
+    by_path = restored.entries[name]
+    host_tree = fill_like(template, by_path)
+
+    if mesh is None:
+        return jax.tree.map(
+            lambda ab, v: jax.numpy.asarray(v, dtype=ab.dtype),
+            template, host_tree)
+
+    if logical_template is None:
+        shardings = jax.tree.map(
+            lambda ab: NamedSharding(mesh, PartitionSpec()), template)
+    else:
+        # logical leaves are tuples of axis names, which tree.map would
+        # recurse into — match by path instead
+        lpaths = dict(flatten_with_paths_tuples(logical_template))
+        tleaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+        shard_leaves = []
+        for p, ab in tleaves:
+            axes = lpaths.get(jax.tree_util.keystr(p))
+            spec = spec_for_axes(plan, axes, ab.shape, mesh) \
+                if axes is not None and plan is not None else PartitionSpec()
+            shard_leaves.append(NamedSharding(mesh, spec))
+        shardings = jax.tree_util.tree_unflatten(treedef, shard_leaves)
+
+    def put(ab, v, sh):
+        arr = np.asarray(v)
+        if str(arr.dtype) != str(ab.dtype):
+            arr = arr.astype(ab.dtype)
+        return jax.device_put(arr, sh)
+
+    return jax.tree.map(put, template, host_tree, shardings)
+
+
+def flatten_with_paths_tuples(tree):
+    """Flatten a logical-axes pytree whose leaves are tuples of
+    axis-name strings (tuples must not be recursed into)."""
+    out = []
+    paths = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))[0]
+    for p, v in paths:
+        out.append((jax.tree_util.keystr(p), v))
+    return out
+
+
+def restore_scalar(restored: RestoredState, name: str):
+    """Entries that are plain scalars/int trees (step counters, cursors)."""
+    by_path = restored.entries[name]
+    if list(by_path) == [""]:
+        v = by_path[""]
+        return v.item() if hasattr(v, "item") and v.ndim == 0 else v
+    return by_path

@@ -1,0 +1,148 @@
+"""Virtual handle translation (paper §III).
+
+The runtime hands out resources whose real identities are not stable
+across a restart: meshes bound to physical devices, compiled executables,
+KV-cache allocations. Exactly like OpenGL's GLuint ids, the real handle
+obtained after restart differs from the one obtained originally — so the
+application (and the op-log) only ever hold *virtual ids*, and a
+translation table maps them to the current incarnation's real objects.
+
+On restore, replay repopulates the table: the same vids come to denote
+freshly created real objects, and nothing above the table notices.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, Generic, Iterator, Optional, Tuple, TypeVar
+
+T = TypeVar("T")
+
+
+class StaleHandleError(KeyError):
+    """A vid from a previous incarnation was used without rebinding."""
+
+
+@dataclass(frozen=True)
+class VirtualId:
+    """Opaque, serializable handle. ``kind`` is a namespace ("mesh",
+    "exec", "cache", ...); ``uid`` is unique within the table's life
+    across incarnations (monotone, never reused)."""
+
+    kind: str
+    uid: int
+
+    def __repr__(self) -> str:
+        return f"<v:{self.kind}#{self.uid}>"
+
+
+class HandleTable:
+    """vid -> real object, with incarnation generations.
+
+    * ``create(kind, obj)``  — allocate a vid bound to obj (logged side).
+    * ``bind(vid, obj)``     — (re)bind an existing vid (replay side).
+    * ``translate(vid)``     — real object for the *current* incarnation;
+                               raises StaleHandleError if not rebound.
+    * ``new_incarnation()``  — invalidate all bindings (fresh lower half),
+                               keeping vids allocated so replay can rebind.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.RLock()
+        self._next_uid = itertools.count(1)
+        self._generation = 0
+        # vid -> (generation, obj)
+        self._real: Dict[VirtualId, Tuple[int, Any]] = {}
+        self._allocated: Dict[VirtualId, None] = {}
+
+    @property
+    def generation(self) -> int:
+        return self._generation
+
+    def create(self, kind: str, obj: Any) -> VirtualId:
+        with self._lock:
+            vid = VirtualId(kind, next(self._next_uid))
+            self._allocated[vid] = None
+            self._real[vid] = (self._generation, obj)
+            return vid
+
+    def allocate(self, kind: str) -> VirtualId:
+        """Allocate a vid with no binding yet (e.g. pre-declared)."""
+        with self._lock:
+            vid = VirtualId(kind, next(self._next_uid))
+            self._allocated[vid] = None
+            return vid
+
+    def bind(self, vid: VirtualId, obj: Any) -> VirtualId:
+        with self._lock:
+            if vid not in self._allocated:
+                # replay of a log from a previous process: adopt the vid,
+                # bumping the uid counter past it so future ids stay unique
+                self._allocated[vid] = None
+                self._next_uid = itertools.count(
+                    max(vid.uid + 1, next(self._next_uid)))
+            self._real[vid] = (self._generation, obj)
+            return vid
+
+    def translate(self, vid: VirtualId) -> Any:
+        with self._lock:
+            entry = self._real.get(vid)
+            if entry is None:
+                raise StaleHandleError(
+                    f"{vid} has no binding in generation {self._generation}")
+            gen, obj = entry
+            if gen != self._generation:
+                raise StaleHandleError(
+                    f"{vid} bound in generation {gen}, current is "
+                    f"{self._generation}; replay must rebind it")
+            return obj
+
+    def is_bound(self, vid: VirtualId) -> bool:
+        with self._lock:
+            e = self._real.get(vid)
+            return e is not None and e[0] == self._generation
+
+    def release(self, vid: VirtualId) -> None:
+        with self._lock:
+            self._real.pop(vid, None)
+            self._allocated.pop(vid, None)
+
+    def new_incarnation(self) -> int:
+        """Start a fresh lower half: every binding becomes stale."""
+        with self._lock:
+            self._generation += 1
+            return self._generation
+
+    def live_vids(self):
+        with self._lock:
+            return [v for v, (g, _) in self._real.items()
+                    if g == self._generation]
+
+
+# --- device correspondence ---------------------------------------------------
+
+class DeviceMap:
+    """Logical mesh coordinate -> physical device, per incarnation.
+
+    The upper half references only (axis_name, index) coordinates; this is
+    the paper's upper/lower thread-correspondence problem mapped to
+    devices. Elastic restarts rebuild it over a different topology."""
+
+    def __init__(self) -> None:
+        self._mesh = None
+
+    def bind_mesh(self, mesh) -> None:
+        self._mesh = mesh
+
+    def device_at(self, **coords):
+        if self._mesh is None:
+            raise StaleHandleError("no mesh bound in this incarnation")
+        idx = tuple(coords.get(a, 0) for a in self._mesh.axis_names)
+        return self._mesh.devices[idx]
+
+    @property
+    def mesh(self):
+        if self._mesh is None:
+            raise StaleHandleError("no mesh bound in this incarnation")
+        return self._mesh

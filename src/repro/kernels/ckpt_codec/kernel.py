@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: int8 block quantization for checkpoint compression.
+
+Why a kernel: snapshotting a 2 TB model's optimizer moments through the
+codec is HBM-bandwidth-bound; fusing abs-max + scale + round into one VMEM
+pass reads each element once (vs 3 passes for the naive composition),
+tripling effective snapshot codec throughput on TPU.
+
+Tiling: rows of 256-lane blocks; each grid step processes a
+(ROWS_PER_TILE, 256) tile resident in VMEM — 256 lanes matches the VPU
+lane width, ROWS_PER_TILE=512 keeps the tile at 512KB f32 in + 128KB int8
+out, well inside VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+ROWS_PER_TILE = 512
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...]                                  # [R, BLOCK] f32
+    amax = jnp.max(jnp.abs(x), axis=1)              # [R]
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def quantize_blocks(xb: jax.Array, *, interpret: bool = False):
+    """xb: f32 [nb, BLOCK] (padded by ops.py) -> (q int8 [nb, BLOCK],
+    scale f32 [nb])."""
+    nb = xb.shape[0]
+    rows = min(ROWS_PER_TILE, nb)
+    assert nb % rows == 0, (nb, rows)
+    grid = (nb // rows,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, BLOCK), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rows, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, BLOCK), jnp.int8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb)
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    q = q_ref[...].astype(jnp.float32)
+    x_ref[...] = q * s_ref[...][:, None]
+
+
+def dequantize_blocks(q: jax.Array, scale: jax.Array, *,
+                      interpret: bool = False):
+    nb = q.shape[0]
+    rows = min(ROWS_PER_TILE, nb)
+    assert nb % rows == 0
+    grid = (nb // rows,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((rows, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
+        interpret=interpret,
+    )(q, scale)

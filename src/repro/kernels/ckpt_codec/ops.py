@@ -1,0 +1,48 @@
+"""jit'd wrappers for the checkpoint codec kernel (padding, device
+dispatch, interpret fallback on CPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ckpt_codec import kernel as K
+from repro.kernels.ckpt_codec.ref import BLOCK
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize(x: jax.Array, *, interpret: bool = None):
+    """x: f32 any shape -> (q [nb, BLOCK] int8, scale [nb] f32)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    xb = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    nb = xb.shape[0]
+    # pad rows so the tile divides evenly
+    rows = min(K.ROWS_PER_TILE, nb)
+    rpad = (-nb) % rows
+    if rpad:
+        xb = jnp.pad(xb, ((0, rpad), (0, 0)))
+    q, s = K.quantize_blocks(xb, interpret=interpret)
+    return q[:nb], s[:nb]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize(q: jax.Array, scale: jax.Array, *, interpret: bool = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    nb = q.shape[0]
+    rows = min(K.ROWS_PER_TILE, nb)
+    rpad = (-nb) % rows
+    if rpad:
+        q = jnp.pad(q, ((0, rpad), (0, 0)))
+        scale = jnp.pad(scale, (0, rpad))
+    x = K.dequantize_blocks(q, scale, interpret=interpret)
+    return x[:nb].reshape(-1)

@@ -1,0 +1,64 @@
+"""Pure reference for the checkpoint codec: int8 block quantization
+(256-lane blocks, symmetric, per-block scale) + delta encoding.
+
+numpy implementations (host checkpoint path) are the oracle the Pallas
+kernel is validated against.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+BLOCK = 256
+
+
+def quantize_ref(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """x: f32 any-shape -> (q int8 [nb, BLOCK], scale f32 [nb]).
+    Padded with zeros to a BLOCK multiple."""
+    flat = np.asarray(x, np.float32).reshape(-1)
+    n = flat.size
+    pad = (-n) % BLOCK
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, np.float32)])
+    xb = flat.reshape(-1, BLOCK)
+    scale = np.maximum(np.abs(xb).max(axis=1), 1e-12) / 127.0
+    q = np.clip(np.rint(xb / scale[:, None]), -127, 127).astype(np.int8)
+    return q, scale.astype(np.float32)
+
+
+def dequantize_ref(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    """-> f32 flat [nb * BLOCK] (caller slices to logical size)."""
+    return (q.astype(np.float32) * scale[:, None].astype(np.float32)).reshape(-1)
+
+
+def delta_encode_ref(x: np.ndarray, prev: np.ndarray) -> np.ndarray:
+    """Byte-level XOR delta (runs of zeros compress well downstream)."""
+    a = np.frombuffer(np.ascontiguousarray(x).tobytes(), np.uint8)
+    b = np.frombuffer(np.ascontiguousarray(prev).tobytes(), np.uint8)
+    assert a.size == b.size
+    return np.bitwise_xor(a, b)
+
+
+def delta_decode_ref(delta: np.ndarray, prev: np.ndarray, dtype, shape):
+    b = np.frombuffer(np.ascontiguousarray(prev).tobytes(), np.uint8)
+    raw = np.bitwise_xor(delta, b).tobytes()
+    return np.frombuffer(raw, dtype=dtype).reshape(shape)
+
+
+# jnp twin (device-side oracle for the Pallas kernel tests)
+def quantize_jnp(x):
+    import jax.numpy as jnp
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.size
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    xb = flat.reshape(-1, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_jnp(q, scale):
+    import jax.numpy as jnp
+    return (q.astype(jnp.float32) * scale[:, None]).reshape(-1)

@@ -1,0 +1,60 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+On TPU this is the compiled Pallas kernel; elsewhere it runs in interpret
+mode (correctness path used by tests). Model code calls this through
+models.layers when CallOptions.use_flash_kernel is set.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "block_q",
+                                    "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+# --- differentiable variant (custom VJP over the Pallas fwd/bwd kernels) ---
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_diff(q, k, v, causal=True, window=0, block_q=128,
+                         block_k=128, interpret=False):
+    out, _ = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interpret, return_lse=True)
+    return out
+
+
+def _fa_fwd(q, k, v, causal, window, block_q, block_k, interpret):
+    out, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=interpret, return_lse=True)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(causal, window, block_q, block_k, interpret, res, do):
+    from repro.kernels.flash_attention.backward import flash_attention_bwd
+    q, k, v, out, lse = res
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, out, lse, do, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return dq, dk, dv
+
+
+flash_attention_diff.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention: naive full-softmax GQA attention
+with identical masking semantics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [B,H,Sq,hd]; k/v: [B,Hkv,Skv,hd] -> [B,H,Sq,hd] (f32 math)."""
+    B, H, Sq, hd = q.shape
+    _, Hkv, Skv, _ = k.shape
+    g = H // Hkv
+    scale = 1.0 / np.sqrt(hd)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, Sq, hd) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qf, kf)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bkcd->bkgqd", p, vf)
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)

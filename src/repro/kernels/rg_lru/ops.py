@@ -1,0 +1,37 @@
+"""jit'd wrapper for the RG-LRU kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rg_lru.kernel import rg_lru_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "block_w", "interpret"))
+def rg_lru_scan(x, r, i, lam, *, chunk: int = 256, block_w: int = 512,
+                interpret: bool = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, W = x.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0)))
+        i = jnp.pad(i, ((0, 0), (0, pad), (0, 0)))
+    bw = min(block_w, W)
+    wpad = (-W) % bw
+    if wpad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, wpad)))
+        r = jnp.pad(r, ((0, 0), (0, 0), (0, wpad)))
+        i = jnp.pad(i, ((0, 0), (0, 0), (0, wpad)))
+        lam = jnp.pad(lam, (0, wpad))
+    y = rg_lru_fwd(x, r, i, lam, chunk=c, block_w=bw, interpret=interpret)
+    return y[:, :S, :W]

@@ -1,0 +1,9 @@
+"""Oracle for the RG-LRU kernel: the model's associative-scan version."""
+from __future__ import annotations
+
+from repro.models.hybrid import rg_lru
+
+
+def rg_lru_ref(x, r, i, lam):
+    h, _ = rg_lru(x, r, i, lam)
+    return h

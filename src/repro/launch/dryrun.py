@@ -1,0 +1,228 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes, prove memory fit, and extract roofline
+terms from the compiled artifact.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --skip-existing
+
+Results land in benchmarks/results/dryrun/<mesh>/<arch>__<shape>.json;
+EXPERIMENTS.md tables are generated from those files.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing module (docstring above is not code):
+# jax locks the device count on first backend init. The dry run — and
+# ONLY the dry run — needs 512 placeholder host devices so
+# jax.make_mesh can build the production mesh.
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry as cfg_registry
+from repro.configs.base import shapes_for
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import (analyze_hlo, roofline_terms,
+                                       PEAK_FLOPS, HBM_BW, ICI_BW)
+from repro.models import model as M
+from repro.optim import abstract_opt_state
+from repro.parallel.planner import make_plan, HBM_BYTES
+from repro.train import step as step_lib
+from repro.serving import engine as engine_lib
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def lower_cell(arch: str, shape_key: str, mesh, plan_overrides=None):
+    """Returns (lowered, plan, aux) for one cell."""
+    cfg = cfg_registry.get_config(arch)
+    shape = cfg_registry.get_shape(shape_key)
+    plan = make_plan(cfg, shape, mesh)
+    if plan_overrides:
+        plan = plan.with_(**plan_overrides)
+    ab_params = M.init_abstract(cfg)
+
+    if shape.kind == "train":
+        fn, info = step_lib.jit_train_step(cfg, shape, mesh, plan=plan,
+                                           donate=True)
+        ab_opt = abstract_opt_state(ab_params, info["opt_cfg"])
+        binputs = info["input_specs"]
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        lrs = jax.ShapeDtypeStruct((), jnp.float32)
+        lowered = fn.lower(ab_params, ab_opt, binputs, step, lrs)
+    elif shape.kind == "prefill":
+        fn, info = engine_lib.jit_prefill(cfg, shape, mesh, plan=plan)
+        specs = engine_lib.serve_input_specs(cfg, shape)
+        args = [ab_params, specs["tokens"], specs["cache"]]
+        if cfg.is_encoder_decoder:
+            args.append(specs["frames"])
+        lowered = fn.lower(*args)
+    else:  # decode
+        fn, info = engine_lib.jit_decode_step(cfg, shape, mesh, plan=plan)
+        specs = engine_lib.serve_input_specs(cfg, shape)
+        lowered = fn.lower(ab_params, specs["cache"], specs["tokens"],
+                           specs["pos"])
+    return lowered, plan
+
+
+def run_cell(arch: str, shape_key: str, mesh_kind: str,
+             plan_overrides=None, tag: str = "") -> dict:
+    cfg = cfg_registry.get_config(arch)
+    shape = cfg_registry.get_shape(shape_key)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    t0 = time.monotonic()
+    lowered, plan = lower_cell(arch, shape_key, mesh, plan_overrides)
+    t_lower = time.monotonic() - t0
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    t_compile = time.monotonic() - t0
+
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+    }
+    # donated args alias outputs; live = args + temps
+    live = mem["argument_bytes"] + mem["temp_bytes"]
+    mem["live_bytes"] = live
+    mem["fits_16g"] = bool(live < 0.98 * HBM_BYTES)
+    print(compiled.memory_analysis())
+
+    ca = compiled.cost_analysis() or {}
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+
+    hlo = compiled.as_text()
+    hlo_dir = RESULTS_DIR.parent / "hlo" / mesh_kind
+    hlo_dir.mkdir(parents=True, exist_ok=True)
+    import gzip
+    suffix = f"__{tag}" if tag else ""
+    with gzip.open(hlo_dir / f"{arch}__{shape_key}{suffix}.txt.gz", "wt") as f:
+        f.write(hlo)
+    counts = analyze_hlo(hlo)
+    terms = roofline_terms(counts)
+    # kernel-adjusted: fusable streaming loops (flash attention / ssd
+    # signature) charged at their streamed-block IO, as the validated
+    # Pallas kernels execute them on TPU (see hlo_analysis.LoopProfile)
+    terms_kernel = roofline_terms(counts, kernel_adjusted=True)
+    fused_loops = [
+        {"trips": lp.trips, "raw_gb": round(lp.raw_hbm / 2**30, 2),
+         "stream_gb": round(lp.stream_hbm / 2**30, 2)}
+        for lp in counts.loops if lp.fusable]
+
+    n_active = cfg.n_active_params()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    if shape.kind == "train":
+        model_flops = 6 * n_active * tokens
+    else:
+        model_flops = 2 * n_active * tokens
+    model_flops_per_chip = model_flops / n_chips
+    parsed = counts.flops
+    useful = model_flops_per_chip / parsed if parsed else 0.0
+
+    result = {
+        "arch": arch, "shape": shape_key, "mesh": mesh_kind,
+        "chips": n_chips, "tag": tag,
+        "plan": plan.notes,
+        "plan_overrides": plan_overrides or {},
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "xla_cost": {"flops": xla_flops, "bytes": xla_bytes,
+                     "note": "loop bodies counted once by XLA"},
+        "parsed": {
+            "flops_per_chip": counts.flops,
+            "hbm_bytes_per_chip": counts.hbm_bytes,
+            "collective_bytes_per_chip": counts.collective_bytes,
+            "collective_breakdown": counts.collective_breakdown,
+            "n_collectives": counts.n_collectives,
+            "while_trips": counts.while_trips[:16],
+        },
+        "roofline": terms,
+        "roofline_kernel_adjusted": terms_kernel,
+        "fused_loops": fused_loops,
+        "model_flops_per_chip": model_flops_per_chip,
+        "useful_flops_ratio": useful,
+        "hw": {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW},
+    }
+    return result
+
+
+def out_path(arch: str, shape_key: str, mesh_kind: str, tag: str = "") -> Path:
+    d = RESULTS_DIR / mesh_kind
+    d.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    return d / f"{arch}__{shape_key}{suffix}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="", help="variant label (perf exps)")
+    ap.add_argument("--plan-overrides", default="",
+                    help='json, e.g. {"seq_shard": true}')
+    args = ap.parse_args()
+
+    overrides = json.loads(args.plan_overrides) if args.plan_overrides else None
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    cells = []
+    if args.all:
+        for arch in cfg_registry.ARCH_IDS:
+            for s in shapes_for(cfg_registry.get_config(arch)):
+                cells.append((arch, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for mesh_kind in meshes:
+        for arch, shape_key in cells:
+            p = out_path(arch, shape_key, mesh_kind, args.tag)
+            if args.skip_existing and p.exists():
+                print(f"skip {p.name} ({mesh_kind})")
+                continue
+            print(f"=== {arch} x {shape_key} on {mesh_kind} ===", flush=True)
+            try:
+                res = run_cell(arch, shape_key, mesh_kind, overrides,
+                               args.tag)
+                p.write_text(json.dumps(res, indent=1))
+                r = res["roofline"]
+                print(f"ok: dominant={r['dominant']} "
+                      f"compute={r['compute_s']:.4f}s "
+                      f"memory={r['memory_s']:.4f}s "
+                      f"collective={r['collective_s']:.4f}s "
+                      f"frac={r['roofline_fraction']:.2f} "
+                      f"live={res['memory']['live_bytes']/2**30:.1f}GiB",
+                      flush=True)
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((mesh_kind, arch, shape_key, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,417 @@
+"""HLO roofline analyzer.
+
+Parses post-SPMD optimized HLO text (compiled.as_text()) and derives the
+three roofline terms, correctly scaling ops inside while loops by their
+trip counts (XLA's aggregate cost_analysis counts loop bodies ONCE, which
+under-reports a scanned 80-layer transformer by ~80x — verified
+empirically; see EXPERIMENTS.md §Dry-run).
+
+Per-chip accounting (HLO shapes are already per-device after SPMD):
+  flops            — dot/convolution ops: 2 * prod(result dims) *
+                     prod(lhs contracting dims), x trip multiplier;
+                     recursing into fusion bodies (dots can be fused).
+  hbm bytes        — sum over surface ops (fusion/dot/collective/gather/
+                     scatter/sort/custom-call) of operand+result bytes,
+                     x trip multiplier. Fusion internals excluded: a
+                     fusion reads inputs once and writes outputs once.
+  collective bytes — per-chip wire bytes with ring factors:
+                     all-gather/all-to-all: result x (n-1)/n
+                     all-reduce:            result x 2(n-1)/n
+                     reduce-scatter:        result x (n-1)
+                     collective-permute:    result x 1
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of one (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclass
+class Op:
+    name: str
+    result_type: str
+    kind: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    params: Dict[str, str] = field(default_factory=dict)  # %pname -> type
+    ops: Dict[str, Op] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+
+
+_COMP_HDR = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->\s*(.+?)\s*\{")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|[\w\[\]\{\},\d]+)\s*"
+    r"([\w\-]+)\((.*)$")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line.strip())
+        if hdr and ("->" in line):
+            cur = Computation(hdr.group(1))
+            # parse parameter types from the signature
+            for pm in re.finditer(r"%?([\w.\-]+):\s*((?:\([^)]*\))|[\w\[\]\{\},\d/]+)",
+                                  hdr.group(2)):
+                cur.params[pm.group(1)] = pm.group(2)
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, rtype, kind, rest = m.groups()
+            # operands: %refs inside the first (...) group
+            depth = 1
+            args = []
+            buf = ""
+            for ch in rest:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        args.append(buf)
+                        break
+                if depth >= 1 and ch != ")":
+                    buf += ch
+            arg_str = args[0] if args else ""
+            operands = re.findall(r"%([\w.\-]+)", arg_str)
+            attrs = rest[len(arg_str):]
+            op = Op(name, rtype, kind, operands, attrs, line)
+            cur.ops[name] = op
+            cur.order.append(name)
+    return comps
+
+
+def _operand_type(comp: Computation, comps: Dict[str, Computation],
+                  name: str) -> str:
+    if name in comp.ops:
+        return comp.ops[name].result_type
+    if name in comp.params:
+        return comp.params[name]
+    return ""
+
+
+def _trip_count(cond_comp: Computation,
+                comps: Dict[str, "Computation"]) -> int:
+    """Extract the loop bound from a while condition computation.
+
+    Handles both a bare `compare(%iv, %constant)` and XLA:CPU's
+    `fusion(%iv, %constant), calls=%wrapped_compare_computation` form."""
+    consts: Dict[str, int] = {}
+    for op in cond_comp.ops.values():
+        if op.kind == "constant":
+            m = re.search(r"constant\((-?\d+)\)", op.line)
+            if m:
+                consts[op.name] = int(m.group(1))
+
+    def direction_of(op: Op) -> str:
+        dm = re.search(r"direction=(\w+)", op.line)
+        if dm:
+            return dm.group(1)
+        fm = re.search(r"calls=%?([\w.\-]+)", op.line)
+        if fm and fm.group(1) in comps:
+            for inner in comps[fm.group(1)].ops.values():
+                if inner.kind == "compare":
+                    dm = re.search(r"direction=(\w+)", inner.line)
+                    if dm:
+                        return dm.group(1)
+        return "LT"
+
+    for op in cond_comp.ops.values():
+        if op.kind in ("compare", "fusion"):
+            hit = [consts[o] for o in op.operands if o in consts]
+            if hit:
+                n = hit[0]
+                return n + 1 if direction_of(op) == "LE" else max(n, 1)
+    if consts:
+        return max(max(consts.values()), 1)
+    return 1
+
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# set via analyze_hlo(assume_bf16=...): count f32 collective payloads at
+# bf16 width (the XLA:CPU bf16-dot upcast artifact; see inline comment)
+_BF16_COLLECTIVE_FIX = False
+# HBM-traffic surface: ops that read/write HBM on TPU. Standalone
+# layout/element ops (transpose, reshape, concatenate, iota, slice,
+# reduce) are excluded — XLA:TPU fuses them into neighbors, while the
+# XLA:CPU HLO we parse leaves many standalone; counting them would
+# overstate the TPU memory term.
+_SURFACE = ("fusion", "dot", "convolution", "gather", "scatter", "sort",
+            "custom-call") + _COLLECTIVES
+
+
+def _is_convert_wrapper(comp: Computation) -> bool:
+    """fusion body containing only converts/copies/bitcasts (dtype
+    roundtrips inserted by XLA:CPU's bf16-dot upcast)."""
+    kinds = {o.kind for o in comp.ops.values()}
+    return bool(kinds) and kinds <= {"parameter", "convert", "copy",
+                                     "bitcast", "transpose"}
+
+
+def _group_size(op: Op) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", op.line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _dot_flops(comp: Computation, comps, op: Op) -> int:
+    _, rdims = shape_dims(op.result_type)
+    lhs_type = _operand_type(comp, comps, op.operands[0]) if op.operands else ""
+    _, ldims = shape_dims(lhs_type)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if cm and cm.group(1):
+        for d in cm.group(1).split(","):
+            if d and int(d) < len(ldims):
+                contract *= ldims[int(d)]
+    rsize = 1
+    for d in rdims:
+        rsize *= d
+    return 2 * rsize * max(contract, 1)
+
+
+@dataclass
+class LoopProfile:
+    """One while loop's contribution (already x trips x outer mult)."""
+    trips: int = 1
+    raw_hbm: float = 0.0       # surface-op traffic inside the body
+    stream_hbm: float = 0.0    # per-trip xs reads + ys writes only
+    n_dots: int = 0
+    has_exp: bool = False
+    has_inner: bool = False    # contains nested while loops
+
+    @property
+    def fusable(self) -> bool:
+        """Streaming-softmax / streaming-recurrence signature: an
+        *innermost* loop whose body re-materializes O(block^2) tiles
+        that a Pallas kernel (see kernels/) keeps in VMEM, streaming
+        only the per-trip input blocks. kernels/flash_attention and
+        kernels/ssd_scan implement exactly this fusion and validate
+        against the same math. Outer loops (the layer scan, microbatch
+        accumulation) also contain exp+dots but are NOT kernels — the
+        innermost restriction excludes them (and prevents
+        double-subtracting nested loops)."""
+        return (self.has_exp and self.n_dots >= 2 and self.trips > 1
+                and not self.has_inner)
+
+
+@dataclass
+class RooflineCounts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_breakdown: Dict[str, float] = field(default_factory=dict)
+    n_collectives: int = 0
+    while_trips: List[int] = field(default_factory=list)
+    loops: List[LoopProfile] = field(default_factory=list)
+    # internal accumulators for loop profiling
+    n_dots: int = 0
+    n_exp: int = 0
+    stream_bytes: float = 0.0
+
+    def merge(self, sub: "RooflineCounts") -> None:
+        self.flops += sub.flops
+        self.hbm_bytes += sub.hbm_bytes
+        self.collective_bytes += sub.collective_bytes
+        for k, v in sub.collective_breakdown.items():
+            self.collective_breakdown[k] = \
+                self.collective_breakdown.get(k, 0.0) + v
+        self.n_collectives += sub.n_collectives
+        self.while_trips.extend(sub.while_trips)
+        self.loops.extend(sub.loops)
+        self.n_dots += sub.n_dots
+        self.n_exp += sub.n_exp
+        self.stream_bytes += sub.stream_bytes
+
+    def hbm_bytes_kernel_adjusted(self) -> float:
+        """Memory traffic if fusable streaming loops ran as the Pallas
+        kernels: subtract their measured body traffic, add back the
+        streamed block IO (dynamic-slice reads / dynamic-update-slice
+        writes per trip)."""
+        adj = self.hbm_bytes
+        for lp in self.loops:
+            if lp.fusable:
+                adj -= lp.raw_hbm
+                adj += lp.stream_hbm
+        return max(adj, 0.0)
+
+
+def _walk(comp: Computation, comps: Dict[str, Computation], mult: float,
+          out: RooflineCounts, surface: bool) -> None:
+    for name in comp.order:
+        op = comp.ops[name]
+        kind = op.kind
+        if kind == "while":
+            body_m = re.search(r"body=%?([\w.\-]+)", op.line)
+            cond_m = re.search(r"condition=%?([\w.\-]+)", op.line)
+            trips = 1
+            if cond_m and cond_m.group(1) in comps:
+                trips = _trip_count(comps[cond_m.group(1)], comps)
+            out.while_trips.append(trips)
+            if body_m and body_m.group(1) in comps:
+                sub = RooflineCounts()
+                _walk(comps[body_m.group(1)], comps, mult * trips, sub, True)
+                out.loops.append(LoopProfile(
+                    trips=trips, raw_hbm=sub.hbm_bytes,
+                    stream_hbm=sub.stream_bytes, n_dots=sub.n_dots,
+                    has_exp=sub.n_exp > 0, has_inner=bool(sub.loops)))
+                out.merge(sub)
+            continue
+        if kind in ("conditional", "call"):
+            for cm in re.finditer(r"(?:branch_computations=\{|to_apply=)%?([\w.\-]+)",
+                                  op.line):
+                if cm.group(1) in comps:
+                    _walk(comps[cm.group(1)], comps, mult, out, surface)
+            continue
+        if kind == "fusion":
+            fm = re.search(r"calls=%?([\w.\-]+)", op.line)
+            if fm and fm.group(1) in comps:
+                called = comps[fm.group(1)]
+                # dots inside fusions count as flops; traffic at boundary
+                _walk(called, comps, mult, out, False)
+                if _is_convert_wrapper(called):
+                    # pure dtype-roundtrip fusion (convert/copy/bitcast
+                    # only): the XLA:CPU bf16-upcast artifact — TPU never
+                    # materializes these. Skip their traffic entirely.
+                    continue
+        if kind in ("dot", "convolution"):
+            out.flops += mult * _dot_flops(comp, comps, op)
+            out.n_dots += 1
+        if kind == "exponential":
+            out.n_exp += 1
+        # streamed block IO (counted at any depth — slices may be fused):
+        # what a Pallas kernel would actually move per grid step
+        if kind == "dynamic-slice":
+            out.stream_bytes += mult * shape_bytes(op.result_type)
+        if kind == "dynamic-update-slice" and len(op.operands) >= 2:
+            out.stream_bytes += mult * shape_bytes(
+                _operand_type(comp, comps, op.operands[1]))
+        if not surface:
+            continue
+        if kind in _COLLECTIVES:
+            rbytes = shape_bytes(op.result_type)
+            # XLA:CPU has no native bf16 dots: it upcasts operands to f32,
+            # and the SPMD partitioner then moves those f32 tensors over
+            # collectives. On TPU the same program moves bf16 (MXU-native).
+            # Count f32 collective payloads at bf16 width when the model
+            # computes in bf16 (set by the dry-run; verified against the
+            # convert(bf16)->convert(f32) wrapper fusions in the HLO).
+            if _BF16_COLLECTIVE_FIX and "f32[" in op.result_type:
+                rbytes = rbytes / 2
+            n = _group_size(op)
+            if kind == "all-reduce":
+                wire = rbytes * 2 * (n - 1) / n
+            elif kind in ("all-gather", "all-to-all"):
+                wire = rbytes * (n - 1) / n
+            elif kind == "reduce-scatter":
+                wire = rbytes * (n - 1)
+            else:  # collective-permute
+                wire = rbytes
+            out.collective_bytes += mult * wire
+            out.collective_breakdown[kind] = \
+                out.collective_breakdown.get(kind, 0.0) + mult * wire
+            out.n_collectives += 1
+            out.hbm_bytes += mult * 2 * rbytes
+            continue
+        if kind in _SURFACE:
+            b = shape_bytes(op.result_type)
+            for o in op.operands:
+                b += shape_bytes(_operand_type(comp, comps, o))
+            out.hbm_bytes += mult * b
+
+
+def analyze_hlo(text: str, assume_bf16: bool = True) -> RooflineCounts:
+    global _BF16_COLLECTIVE_FIX
+    _BF16_COLLECTIVE_FIX = assume_bf16
+    comps = parse_hlo(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: the computation with the most ops
+        entry = max(comps, key=lambda c: len(comps[c].ops))
+    out = RooflineCounts()
+    _walk(comps[entry], comps, 1.0, out, True)
+    return out
+
+
+# hardware targets (TPU v5e per chip)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def roofline_terms(counts: RooflineCounts,
+                   kernel_adjusted: bool = False) -> Dict[str, float]:
+    t_c = counts.flops / PEAK_FLOPS
+    hbm = counts.hbm_bytes_kernel_adjusted() if kernel_adjusted \
+        else counts.hbm_bytes
+    t_m = hbm / HBM_BW
+    t_x = counts.collective_bytes / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    bound = max(t_c, t_m, t_x)
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dom[1],
+        "bound_s": bound,
+        "roofline_fraction": (t_c / bound) if bound > 0 else 0.0,
+    }

@@ -1,0 +1,71 @@
+"""Training launcher: run any registry architecture under the C/R
+runtime, with automatic restore-if-checkpoint-exists semantics (the
+production crash-loop contract: the same command line either cold-starts
+or transparently resumes).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b-smoke \
+      --shape train_s32_b4 --steps 20 --ckpt-dir /tmp/job1 [--backend sharded]
+
+Re-running the identical command after a kill continues bitwise from the
+last committed checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro.core import CheckpointManager, make_backend
+from repro.train.loop import Trainer, TrainJob
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help="registry id or '<id>-smoke'")
+    ap.add_argument("--shape", default="train_s32_b4",
+                    help="shape cell or '<kind>_s<seq>_b<batch>'")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--ckpt-every", type=int, default=5)
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--backend", choices=("localfs", "sharded"),
+                    default="localfs")
+    ap.add_argument("--keep-last", type=int, default=3)
+    ap.add_argument("--data-mesh", type=int, default=0,
+                    help="data axis size (0 = all local devices)")
+    ap.add_argument("--model-mesh", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    n_dev = len(jax.devices())
+    d = args.data_mesh or (n_dev // args.model_mesh)
+    mgr = CheckpointManager(make_backend(args.backend, args.ckpt_dir),
+                            async_save=True, keep_last=args.keep_last)
+
+    if mgr.backend.latest_step() is not None:
+        tr = Trainer.restore(mgr)
+        print(f"[launch] RESUMED {args.arch} at step "
+              f"{int(tr.upper.get('step'))} from {args.ckpt_dir}")
+    else:
+        job = TrainJob(arch=args.arch, shape_key=args.shape)
+        tr = Trainer(job, (d, args.model_mesh), ("data", "model"),
+                     manager=mgr)
+        tr.init_state()
+        print(f"[launch] COLD START {args.arch} on mesh "
+              f"({d},{args.model_mesh})")
+
+    start = int(tr.upper.get("step"))
+    for step in range(start, args.steps):
+        m = tr.train_steps(1)
+        print(f"step {m['step']:5.0f} loss {m['loss']:.4f} "
+              f"lr {m['lr']:.2e}", flush=True)
+        if (step + 1) % args.ckpt_every == 0 or step + 1 == args.steps:
+            tr.save(block=False)
+    mgr.wait()
+    print(f"[launch] done at step {int(tr.upper.get('step'))}; "
+          f"checkpoints: {mgr.backend.list_steps()}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

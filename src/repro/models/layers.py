@@ -1,0 +1,387 @@
+"""Shared neural-net layers: norms, RoPE, GQA attention (training /
+prefill / decode, full or windowed), and MLP variants.
+
+Attention for long sequences is implemented as a *chunked, numerically
+stable streaming softmax* (the flash-attention recurrence) in pure JAX
+lax.scan — this bounds peak activation memory structurally (no [S, S]
+score materialization), keeps HLO size O(1) in sequence length, and is
+the same blocking the Pallas kernel (kernels/flash_attention) uses on
+real TPUs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import contextvars
+
+from repro.configs.base import ModelConfig
+from repro.models.params import P
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps masked softmax NaN-free
+
+# Interior tensor-parallel constraint, installed by train/serving step
+# builders (see train.step.make_call_options). Applied to the TP-sharded
+# interior activations (MLP hidden, attention heads) so the SPMD
+# partitioner reshards *activations* (Megatron ag/rs) instead of
+# all-gathering weights to full — observed 8x collective inflation on
+# qwen1.5-110b without this (EXPERIMENTS.md §Perf iter3).
+_TP_CONSTRAINT: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_tp_constraint", default=None)
+
+
+def set_tp_constraint(fn):
+    """fn(x, sharded_dim) -> x; returns a contextvar token."""
+    return _TP_CONSTRAINT.set(fn)
+
+
+def _tp(x: jax.Array, dim: int) -> jax.Array:
+    fn = _TP_CONSTRAINT.get()
+    return fn(x, dim) if fn is not None else x
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_template(cfg: ModelConfig, d: Optional[int] = None) -> Dict[str, P]:
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": P((d,), (None,), init="ones", dtype="float32"),
+                "bias": P((d,), (None,), init="zeros", dtype="float32")}
+    return {"scale": P((d,), (None,), init="zeros", dtype="float32")}
+
+
+def apply_norm(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_apply(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-np.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention parameter template
+# ---------------------------------------------------------------------------
+
+def attention_template(cfg: ModelConfig) -> Dict[str, Any]:
+    d, h = cfg.d_model, cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    t: Dict[str, Any] = {
+        "wq": P((d, nh, h), ("embed", "heads", None), fan_in=d),
+        "wk": P((d, nkv, h), ("embed", "kv_heads", None), fan_in=d),
+        "wv": P((d, nkv, h), ("embed", "kv_heads", None), fan_in=d),
+        "wo": P((nh, h, d), ("heads", None, "embed"), fan_in=nh * h),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = P((nh, h), ("heads", None), init="zeros")
+        t["bk"] = P((nkv, h), ("kv_heads", None), init="zeros")
+        t["bv"] = P((nkv, h), ("kv_heads", None), init="zeros")
+    if cfg.qk_norm:
+        t["q_norm"] = P((h,), (None,), init="zeros", dtype="float32")
+        t["k_norm"] = P((h,), (None,), init="zeros", dtype="float32")
+    return t
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention — training / prefill
+# ---------------------------------------------------------------------------
+
+def _pad_axis(x: jax.Array, axis: int, to_mult: int, value=0.0):
+    n = x.shape[axis]
+    pad = (-n) % to_mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def chunked_attention(
+    q: jax.Array,              # [B, Sq, Hkv, G, hd]
+    k: jax.Array,              # [B, Skv, Hkv, hd]
+    v: jax.Array,              # [B, Skv, Hkv, hd]
+    q_pos: jax.Array,          # [B, Sq] int32
+    kv_pos: jax.Array,         # [B, Skv] int32 (-1 = invalid slot)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Streaming-softmax attention over kv chunks. Returns [B,Sq,Hkv,G,hd].
+
+    Positions drive masking (supports ring-buffer caches whose slots are
+    out of order). f32 accumulation throughout.
+    """
+    B, Sq, Hkv, G, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    chunk = min(chunk, k.shape[1])
+
+    kp = _pad_axis(k, 1, chunk)
+    vp = _pad_axis(v, 1, chunk)
+    pp = _pad_axis(kv_pos, 1, chunk, value=-1)
+    nkc = kp.shape[1] // chunk
+
+    # [nkc, B, chunk, ...]
+    ks = kp.reshape(B, nkc, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vs = vp.reshape(B, nkc, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    ps = pp.reshape(B, nkc, chunk).transpose(1, 0, 2)
+
+    qf = (q.astype(jnp.float32) * scale)
+
+    def body(carry, kv_chunk):
+        m, l, acc = carry
+        kc, vc, pc = kv_chunk
+        # scores: [B, Sq, Hkv, G, chunk]
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qf, kc.astype(jnp.float32))
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        valid = pc[:, None, :] >= 0  # [B, 1, chunk]
+        if causal:
+            valid = valid & (pc[:, None, :] <= q_pos[:, :, None])
+        if window > 0:
+            valid = valid & (q_pos[:, :, None] - pc[:, None, :] < window)
+        s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, hd), jnp.float32)
+    # remat the kv-chunk body: backward recomputes the [.., Sq, chunk]
+    # score/prob tiles instead of saving one per chunk (which would cost
+    # nkc x B x Sq x H x chunk x 4B of live temps per layer)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                  (ks, vs, ps))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def dense_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    q_pos: jax.Array, kv_pos: jax.Array,
+    *, causal: bool = True, window: int = 0, softcap: float = 0.0,
+) -> jax.Array:
+    """One-shot softmax attention (decode and short-seq paths).
+
+    Shapes as chunked_attention. XLA shards the kv/seq axis freely; with a
+    seq-sharded cache the partial-softmax combine lowers to small
+    all-reduces (flash-decoding pattern).
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = kv_pos[:, None, :] >= 0
+    if causal:
+        valid = valid & (kv_pos[:, None, :] <= q_pos[:, :, None])
+    if window > 0:
+        valid = valid & (q_pos[:, :, None] - kv_pos[:, None, :] < window)
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("bqkgc,bckd->bqkgd", p, v.astype(jnp.float32))
+    out = out / jnp.maximum(p.sum(axis=-1), 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full attention block (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+def attention_forward(
+    cfg: ModelConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,                   # [B, S, D]
+    positions: jax.Array,           # [B, S]
+    *,
+    window: int = 0,
+    causal: bool = True,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    use_rope: bool = True,
+    attn_chunk: int = 1024,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Returns (output [B,S,D], updated cache).
+
+    cache layouts (created by serving.kv_cache):
+      full:   {"k": [B,Smax,Hkv,hd], "v": ..., "pos": [B,Smax] int32}
+      window: same with Smax == window, ring-buffer indexed by position.
+    cross_kv: precomputed encoder (k, v) for cross-attention; cache unused.
+    """
+    B, S, D = x.shape
+    h = cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    g = nh // nkv
+
+    q = _tp(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), 2)
+    if "bq" in p:
+        q = q + p["bq"]
+    if cross_kv is None:
+        k = _tp(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), 2)
+        v = _tp(jnp.einsum("bsd,dhk->bshk", x, p["wv"]), 2)
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+    else:
+        k, v = cross_kv
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        if cross_kv is None:
+            k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope_apply(q, positions, cfg.rope_theta)
+        if cross_kv is None:
+            k = rope_apply(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if cross_kv is not None:
+        kv_heads = k.shape[2]
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(k.shape[1], dtype=jnp.int32)[None], (B, k.shape[1]))
+        qg = q.reshape(B, S, kv_heads, nh // kv_heads, h)
+        out = dense_attention(qg, k, v, positions, kv_pos, causal=False)
+    elif cache is not None:
+        smax = cache["k"].shape[1]
+        if window > 0 and S > smax:
+            # prefill into a ring buffer: only the trailing `window`
+            # positions can ever be attended to — write just those.
+            k_w, v_w, pos_w = k[:, -smax:], v[:, -smax:], positions[:, -smax:]
+            slot = pos_w % smax
+            ck = _scatter_rows(cache["k"], slot, k_w)
+            cv = _scatter_rows(cache["v"], slot, v_w)
+            cpos = _scatter_rows(cache["pos"], slot, pos_w)
+        else:
+            slot = positions % smax if window > 0 else positions
+            ck = _scatter_rows(cache["k"], slot, k)
+            cv = _scatter_rows(cache["v"], slot, v)
+            cpos = _scatter_rows(cache["pos"], slot, positions)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        qg = q.reshape(B, S, nkv, g, h)
+        if S == 1:
+            # decode: attend over the cache (seq axis freely shardable)
+            att_k, att_v, att_pos = ck, cv, cpos
+        else:
+            # prefill: attend over the inputs (a ring cache only holds the
+            # trailing window; every query still sees its own context here)
+            att_k, att_v, att_pos = k, v, positions
+        if S == 1 or att_k.shape[1] <= 2048:
+            out = dense_attention(qg, att_k, att_v, positions, att_pos,
+                                  causal=causal, window=window,
+                                  softcap=cfg.attn_logit_softcap)
+        else:
+            out = chunked_attention(qg, att_k, att_v, positions, att_pos,
+                                    causal=causal, window=window,
+                                    softcap=cfg.attn_logit_softcap,
+                                    chunk=attn_chunk)
+    else:
+        qg = q.reshape(B, S, nkv, g, h)
+        kv_pos = positions
+        if S <= 2048:
+            out = dense_attention(qg, k, v, positions, kv_pos,
+                                  causal=causal, window=window,
+                                  softcap=cfg.attn_logit_softcap)
+        else:
+            out = chunked_attention(qg, k, v, positions, kv_pos,
+                                    causal=causal, window=window,
+                                    softcap=cfg.attn_logit_softcap,
+                                    chunk=attn_chunk)
+
+    out = _tp(out.reshape(B, S, nh, h), 2)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def _scatter_rows(buf: jax.Array, slots: jax.Array, rows: jax.Array) -> jax.Array:
+    """buf: [B, Smax, ...]; slots: [B, S]; rows: [B, S, ...] -> updated buf.
+
+    S is typically 1 (decode) or Smax (prefill into an empty cache)."""
+    B, S = slots.shape
+    if S == buf.shape[1] and rows.shape[:2] == buf.shape[:2]:
+        # full overwrite in slot order (prefill fills every slot exactly once
+        # when S == Smax and slots is a permutation — true for pos 0..S-1)
+        return rows.astype(buf.dtype)
+    b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    return buf.at[b_idx, slots].set(rows.astype(buf.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def mlp_template(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    if cfg.act in ("silu", "gelu_glu"):
+        return {
+            "w_gate": P((d, f), ("embed", "ff"), fan_in=d),
+            "w_up": P((d, f), ("embed", "ff"), fan_in=d),
+            "w_down": P((f, d), ("ff", "embed"), fan_in=f),
+        }
+    t = {
+        "w_in": P((d, f), ("embed", "ff"), fan_in=d),
+        "w_out": P((f, d), ("ff", "embed"), fan_in=f),
+    }
+    if cfg.norm == "layernorm":  # bias-ful families (starcoder2, whisper)
+        t["b_in"] = P((f,), ("ff",), init="zeros")
+        t["b_out"] = P((d,), (None,), init="zeros")
+    return t
+
+
+def mlp_forward(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    if cfg.act == "silu":
+        h = jax.nn.silu(_tp(x @ p["w_gate"], -1)) * _tp(x @ p["w_up"], -1)
+        return h @ p["w_down"]
+    if cfg.act == "gelu_glu":
+        h = jax.nn.gelu(_tp(x @ p["w_gate"], -1)) * _tp(x @ p["w_up"], -1)
+        return h @ p["w_down"]
+    h = _tp(x @ p["w_in"], -1)
+    if "b_in" in p:
+        h = h + p["b_in"]
+    h = jax.nn.gelu(h)
+    y = h @ p["w_out"]
+    if "b_out" in p:
+        y = y + p["b_out"]
+    return y

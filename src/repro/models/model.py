@@ -1,0 +1,434 @@
+"""Model assembly: one entry point for all 10 assigned architectures.
+
+``build`` returns a family-appropriate ``ModelFns`` bundle of pure
+functions (init / abstract init / logical specs / train forward / prefill
+/ decode_step / cache_spec). Layer stacks run under jax.lax.scan with
+stacked parameters so HLO size and compile time are O(1) in depth, and
+remat ("full") wraps the scan body.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import params as PM
+from repro.models.params import P, stacked
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import hybrid as HY
+
+
+@dataclass
+class CallOptions:
+    remat: str = "none"             # none | full
+    attn_chunk: int = 1024
+    # applied to the residual stream between blocks (sequence parallelism /
+    # sharding hints); signature x -> x
+    act_constraint: Optional[Callable] = None
+    # applied to logits (vocab sharding hint)
+    logit_constraint: Optional[Callable] = None
+
+
+def _maybe(fn, x):
+    return fn(x) if fn is not None else x
+
+
+# ---------------------------------------------------------------------------
+# templates
+# ---------------------------------------------------------------------------
+
+def _ffn_template(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.n_experts:
+        return MOE.moe_template(cfg)
+    return L.mlp_template(cfg)
+
+
+def _decoder_block_template(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": L.norm_template(cfg),
+        "attn": L.attention_template(cfg),
+        "ln2": L.norm_template(cfg),
+        "ffn": _ffn_template(cfg),
+    }
+
+
+def param_template(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    t: Dict[str, Any] = {
+        "tok_emb": P((v, d), ("vocab", "embed"), fan_in=d),
+        "final_norm": L.norm_template(cfg),
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = P((d, v), ("embed", "vocab"), fan_in=d)
+
+    if cfg.family == "ssm":
+        t["layers"] = stacked(cfg.n_layers, SSM.ssm_block_template(cfg))
+    elif cfg.family == "hybrid":
+        period = len(cfg.block_pattern)
+        n_groups, rem = divmod(cfg.n_layers, period)
+        group_t = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            group_t[f"b{i}_{kind}"] = (
+                HY.rglru_block_template(cfg) if kind == "rglru"
+                else HY.attn_block_template(cfg))
+        t["groups"] = stacked(n_groups, group_t)
+        for i in range(rem):
+            kind = cfg.block_pattern[i]
+            t[f"rem{i}_{kind}"] = (
+                HY.rglru_block_template(cfg) if kind == "rglru"
+                else HY.attn_block_template(cfg))
+    elif cfg.is_encoder_decoder:
+        t["enc_layers"] = stacked(cfg.n_encoder_layers, {
+            "ln1": L.norm_template(cfg),
+            "attn": L.attention_template(cfg),
+            "ln2": L.norm_template(cfg),
+            "ffn": L.mlp_template(cfg),
+        })
+        t["enc_final_norm"] = L.norm_template(cfg)
+        t["layers"] = stacked(cfg.n_layers, {
+            "ln1": L.norm_template(cfg),
+            "attn": L.attention_template(cfg),
+            "ln_cross": L.norm_template(cfg),
+            "cross": L.attention_template(cfg),
+            "ln2": L.norm_template(cfg),
+            "ffn": L.mlp_template(cfg),
+        })
+    else:  # dense / moe / vlm decoder
+        t["layers"] = stacked(cfg.n_layers, _decoder_block_template(cfg))
+    return t
+
+
+# ---------------------------------------------------------------------------
+# block forward (dense/moe decoder)
+# ---------------------------------------------------------------------------
+
+def _decoder_block(cfg: ModelConfig, opts: CallOptions, p, x, positions,
+                   cache=None):
+    h = L.apply_norm(cfg, p["ln1"], x)
+    a, new_kv = L.attention_forward(
+        cfg, p["attn"], h, positions,
+        window=cfg.attn_window, cache=cache, attn_chunk=opts.attn_chunk)
+    x = x + a
+    x = _maybe(opts.act_constraint, x)
+    h = L.apply_norm(cfg, p["ln2"], x)
+    if cfg.n_experts:
+        f, aux = MOE.moe_forward(cfg, p["ffn"], h)
+    else:
+        f, aux = L.mlp_forward(cfg, p["ffn"], h), jnp.zeros((), jnp.float32)
+    x = x + f
+    x = _maybe(opts.act_constraint, x)
+    return x, new_kv, aux
+
+
+# ---------------------------------------------------------------------------
+# backbone drivers (scan over stacked layers)
+# ---------------------------------------------------------------------------
+
+def _scan_decoder(cfg, opts, stacked_params, x, positions, caches):
+    """caches: stacked pytree with leading layer dim, or None."""
+
+    def body(carry, xs):
+        xc, aux = carry
+        p_l, cache_l = xs
+        xc, new_kv, a = _decoder_block(cfg, opts, p_l, xc, positions, cache_l)
+        return (xc, aux + a), new_kv
+
+    body_fn = jax.checkpoint(body) if opts.remat == "full" else body
+    (x, aux), new_caches = jax.lax.scan(
+        body_fn, (x, jnp.zeros((), jnp.float32)), (stacked_params, caches))
+    return x, aux, new_caches
+
+
+def _scan_ssm(cfg, opts, stacked_params, x, caches):
+    def body(carry, xs):
+        xc = carry
+        p_l, cache_l = xs
+        out, new_c = SSM.ssm_block_forward(cfg, p_l, xc, cache_l)
+        xc = _maybe(opts.act_constraint, xc + out)
+        return xc, new_c
+
+    body_fn = jax.checkpoint(body) if opts.remat == "full" else body
+    x, new_caches = jax.lax.scan(body_fn, x, (stacked_params, caches))
+    return x, new_caches
+
+
+def _hybrid_group(cfg, opts, p_g, x, positions, cache_g):
+    new_cache = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        key = f"b{i}_{kind}"
+        c = cache_g[key] if cache_g is not None else None
+        if kind == "rglru":
+            x, nc = HY.rglru_block_forward(cfg, p_g[key], x, c)
+        else:
+            x, nc = HY.attn_block_forward(cfg, p_g[key], x, positions, c)
+        x = _maybe(opts.act_constraint, x)
+        new_cache[key] = nc
+    return x, new_cache
+
+
+def _scan_hybrid(cfg, opts, params, x, positions, caches):
+    def body(carry, xs):
+        xc = carry
+        p_g, cache_g = xs
+        xc, new_c = _hybrid_group(cfg, opts, p_g, xc, positions, cache_g)
+        return xc, new_c
+
+    body_fn = jax.checkpoint(body) if opts.remat == "full" else body
+    group_caches = caches["groups"] if caches is not None else None
+    x, new_group_caches = jax.lax.scan(
+        body_fn, x, (params["groups"], group_caches))
+
+    period = len(cfg.block_pattern)
+    rem = cfg.n_layers % period
+    new_caches = {"groups": new_group_caches} if caches is not None else None
+    for i in range(rem):
+        kind = cfg.block_pattern[i]
+        key = f"rem{i}_{kind}"
+        c = caches[key] if caches is not None else None
+        if kind == "rglru":
+            x, nc = HY.rglru_block_forward(cfg, params[key], x, c)
+        else:
+            x, nc = HY.attn_block_forward(cfg, params[key], x, positions, c)
+        if caches is not None:
+            new_caches[key] = nc
+    return x, new_caches
+
+
+def _whisper_encoder(cfg, opts, params, frames):
+    """frames: [B, Senc, D] precomputed embeddings (stub frontend)."""
+    B, Se, D = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None], (B, Se))
+    x = frames.astype(jnp.dtype(cfg.dtype))
+
+    def body(xc, p_l):
+        h = L.apply_norm(cfg, p_l["ln1"], xc)
+        a, _ = L.attention_forward(cfg, p_l["attn"], h, pos, causal=False)
+        xc = xc + a
+        h = L.apply_norm(cfg, p_l["ln2"], xc)
+        xc = xc + L.mlp_forward(cfg, p_l["ffn"], h)
+        return xc, None
+
+    body_fn = jax.checkpoint(body) if opts.remat == "full" else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return L.apply_norm(cfg, params["enc_final_norm"], x)
+
+
+def _whisper_decoder(cfg, opts, params, x, positions, enc_out=None,
+                     caches=None, cross_kv=None):
+    """Either enc_out (train/prefill: compute cross k/v) or cross_kv
+    (decode: precomputed, stacked over layers) must be given."""
+
+    def body(carry, xs):
+        xc = carry
+        p_l, cache_l, ckv_l = xs
+        h = L.apply_norm(cfg, p_l["ln1"], xc)
+        a, new_kv = L.attention_forward(
+            cfg, p_l["attn"], h, positions, cache=cache_l,
+            attn_chunk=opts.attn_chunk)
+        xc = xc + a
+        h = L.apply_norm(cfg, p_l["ln_cross"], xc)
+        if ckv_l is None:
+            ck = jnp.einsum("bsd,dhk->bshk", enc_out, p_l["cross"]["wk"])
+            cv = jnp.einsum("bsd,dhk->bshk", enc_out, p_l["cross"]["wv"])
+        else:
+            ck, cv = ckv_l
+        c, _ = L.attention_forward(
+            cfg, p_l["cross"], h, positions, cross_kv=(ck, cv),
+            use_rope=False)
+        xc = xc + c
+        h = L.apply_norm(cfg, p_l["ln2"], xc)
+        xc = xc + L.mlp_forward(cfg, p_l["ffn"], h)
+        xc = _maybe(opts.act_constraint, xc)
+        new_ckv = (ck, cv) if caches is not None else None
+        return xc, (new_kv, new_ckv)
+
+    body_fn = jax.checkpoint(body) if opts.remat == "full" else body
+    self_caches = caches["self"] if caches is not None else None
+    x, (new_self, new_cross) = jax.lax.scan(
+        body_fn, x, (params["layers"], self_caches, cross_kv))
+    new_caches = None
+    if caches is not None:
+        new_caches = {"self": new_self, "cross": new_cross}
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, tokens):
+    return jnp.take(params["tok_emb"], tokens, axis=0)
+
+
+def _logits(cfg, opts, params, x):
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        out = jnp.einsum("bsd,vd->bsv", x, params["tok_emb"])
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return _maybe(opts.logit_constraint, out)
+
+
+def forward_train(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+                  opts: CallOptions = CallOptions()):
+    """Full-sequence forward. batch: tokens [B,S] (+ frames for enc-dec).
+
+    Returns (logits [B,S,V], aux: dict)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = _embed(cfg, params, tokens)
+    x = _maybe(opts.act_constraint, x)
+    aux = {"moe_aux": jnp.zeros((), jnp.float32)}
+
+    if cfg.family == "ssm":
+        x, _ = _scan_ssm(cfg, opts, params["layers"], x, None)
+    elif cfg.family == "hybrid":
+        x, _ = _scan_hybrid(cfg, opts, params, x, positions, None)
+    elif cfg.is_encoder_decoder:
+        enc = _whisper_encoder(cfg, opts, params, batch["frames"])
+        x, _ = _whisper_decoder(cfg, opts, params, x, positions, enc_out=enc,
+                                cross_kv=None)
+    else:
+        x, moe_aux, _ = _scan_decoder(cfg, opts, params["layers"], x,
+                                      positions, None)
+        aux["moe_aux"] = moe_aux
+
+    return _logits(cfg, opts, params, x), aux
+
+
+# --- caches -----------------------------------------------------------------
+
+def kv_cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    """Abstract spec for one attention layer's cache."""
+    h, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    smax = min(max_seq, cfg.attn_window) if cfg.attn_window else max_seq
+    bf16 = jnp.dtype(cfg.dtype)
+    return {
+        "k": jax.ShapeDtypeStruct((batch, smax, nkv, h), bf16),
+        "v": jax.ShapeDtypeStruct((batch, smax, nkv, h), bf16),
+        "pos": jax.ShapeDtypeStruct((batch, smax), jnp.int32),
+    }
+
+
+def _stack_spec(n: int, spec):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    """Abstract cache pytree for the whole model (decode state)."""
+    if cfg.family == "ssm":
+        return _stack_spec(cfg.n_layers, SSM.ssm_cache_spec(cfg, batch))
+    if cfg.family == "hybrid":
+        period = len(cfg.block_pattern)
+        n_groups, rem = divmod(cfg.n_layers, period)
+        g: Dict[str, Any] = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            g[f"b{i}_{kind}"] = (HY.rglru_cache_spec(cfg, batch)
+                                 if kind == "rglru"
+                                 else kv_cache_spec(cfg, batch, max_seq))
+        out: Dict[str, Any] = {"groups": _stack_spec(n_groups, g)}
+        for i in range(rem):
+            kind = cfg.block_pattern[i]
+            out[f"rem{i}_{kind}"] = (HY.rglru_cache_spec(cfg, batch)
+                                     if kind == "rglru"
+                                     else kv_cache_spec(cfg, batch, max_seq))
+        return out
+    if cfg.is_encoder_decoder:
+        h, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+        bf16 = jnp.dtype(cfg.dtype)
+        ck = jax.ShapeDtypeStruct((batch, cfg.encoder_seq, nkv, h), bf16)
+        return {
+            "self": _stack_spec(cfg.n_layers, kv_cache_spec(cfg, batch, max_seq)),
+            "cross": _stack_spec(cfg.n_layers, (ck, ck)),
+        }
+    return _stack_spec(cfg.n_layers, kv_cache_spec(cfg, batch, max_seq))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    spec = cache_spec(cfg, batch, max_seq)
+
+    def zero(s):
+        if s.dtype == jnp.int32:
+            return jnp.full(s.shape, -1, jnp.int32)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree.map(zero, spec)
+
+
+# --- prefill / decode --------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, tokens, cache,
+            opts: CallOptions = CallOptions(), frames=None):
+    """Run the full prompt, filling `cache`. Returns (last_logits, cache)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = _embed(cfg, params, tokens)
+    x = _maybe(opts.act_constraint, x)
+
+    if cfg.family == "ssm":
+        x, new_cache = _scan_ssm(cfg, opts, params["layers"], x, cache)
+    elif cfg.family == "hybrid":
+        x, new_cache = _scan_hybrid(cfg, opts, params, x, positions, cache)
+    elif cfg.is_encoder_decoder:
+        enc = _whisper_encoder(cfg, opts, params, frames)
+        x, new_cache = _whisper_decoder(cfg, opts, params, x, positions,
+                                        enc_out=enc, caches=cache,
+                                        cross_kv=None)
+    else:
+        x, _, new_cache = _scan_decoder(cfg, opts, params["layers"], x,
+                                        positions, cache)
+
+    logits = _logits(cfg, opts, params, x[:, -1:])
+    return logits[:, 0], new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
+                opts: CallOptions = CallOptions()):
+    """One token for every sequence. tokens: [B,1]; pos: [B] int32.
+
+    Returns (logits [B,V], new_cache)."""
+    B = tokens.shape[0]
+    positions = pos[:, None].astype(jnp.int32)
+    x = _embed(cfg, params, tokens)
+
+    if cfg.family == "ssm":
+        x, new_cache = _scan_ssm(cfg, opts, params["layers"], x, cache)
+    elif cfg.family == "hybrid":
+        x, new_cache = _scan_hybrid(cfg, opts, params, x, positions, cache)
+    elif cfg.is_encoder_decoder:
+        x, new_cache = _whisper_decoder(
+            cfg, opts, params, x, positions,
+            caches=cache, cross_kv=cache["cross"])
+        new_cache = {"self": new_cache["self"], "cross": cache["cross"]}
+    else:
+        x, _, new_cache = _scan_decoder(cfg, opts, params["layers"], x,
+                                        positions, cache)
+
+    logits = _logits(cfg, opts, params, x)
+    return logits[:, 0], new_cache
+
+
+# --- init --------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, rng: jax.Array):
+    return PM.init_concrete(param_template(cfg), cfg.dtype, rng)
+
+
+def init_abstract(cfg: ModelConfig):
+    return PM.init_abstract(param_template(cfg), cfg.dtype)
+
+
+def logical_specs(cfg: ModelConfig):
+    return PM.logical_specs(param_template(cfg))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return PM.count_params(init_abstract(cfg))

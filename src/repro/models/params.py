@@ -1,0 +1,125 @@
+"""Parameter templates: one declaration drives concrete init, abstract
+(ShapeDtypeStruct) init for the dry-run, and logical sharding specs.
+
+A model declares a nested dict of ``P`` leaves. From that single template
+we derive:
+  * ``init_concrete``  — real arrays (smoke tests / examples),
+  * ``init_abstract``  — ShapeDtypeStructs (dry-run: no allocation),
+  * ``logical_specs``  — pytree of logical-axis tuples consumed by
+                         parallel.sharding to build NamedShardings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class P:
+    """One parameter leaf: shape + logical axis names + init style."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | scaled
+    scale: float = 1.0          # stddev multiplier for normal/scaled
+    fan_in: int = 0             # for scaled init: std = scale/sqrt(fan_in)
+    dtype: Optional[str] = None  # override model dtype (e.g. f32 norms)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} / axes {self.axes} mismatch")
+
+
+def stacked(n_layers: int, tree: Dict[str, Any]) -> Dict[str, Any]:
+    """Add a leading 'layers' axis to every leaf (for lax.scan)."""
+
+    def f(leaf: P) -> P:
+        return P(
+            shape=(n_layers,) + leaf.shape,
+            axes=("layers",) + leaf.axes,
+            init=leaf.init,
+            scale=leaf.scale,
+            fan_in=leaf.fan_in,
+            dtype=leaf.dtype,
+        )
+
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _leaf_dtype(leaf: P, default: str):
+    return jnp.dtype(leaf.dtype or default)
+
+
+def init_abstract(template: Dict[str, Any], default_dtype: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree — zero allocation, dry-run safe."""
+
+    def f(leaf: P):
+        return jax.ShapeDtypeStruct(leaf.shape, _leaf_dtype(leaf, default_dtype))
+
+    return jax.tree.map(f, template, is_leaf=lambda x: isinstance(x, P))
+
+
+def logical_specs(template: Dict[str, Any]) -> Dict[str, Any]:
+    def f(leaf: P):
+        return tuple(leaf.axes)
+
+    return jax.tree.map(f, template, is_leaf=lambda x: isinstance(x, P))
+
+
+def init_concrete(template: Dict[str, Any], default_dtype: str, rng: jax.Array) -> Dict[str, Any]:
+    """Materialize real parameters. Deterministic in ``rng``: each leaf's
+    key is folded from the hash of its path, so adding/removing params
+    does not perturb sibling initializations (important for bitwise
+    restore tests across code revisions)."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=lambda x: isinstance(x, P))[0]
+    treedef = jax.tree.structure(template, is_leaf=lambda x: isinstance(x, P))
+
+    out = []
+    for path, leaf in leaves_with_paths:
+        pathstr = jax.tree_util.keystr(path)
+        key = jax.random.fold_in(rng, _stable_hash(pathstr))
+        dt = _leaf_dtype(leaf, default_dtype)
+        if leaf.init == "zeros":
+            arr = jnp.zeros(leaf.shape, dt)
+        elif leaf.init == "ones":
+            arr = jnp.ones(leaf.shape, dt)
+        elif leaf.init in ("normal", "scaled"):
+            fan_in = leaf.fan_in or (leaf.shape[-2] if len(leaf.shape) >= 2 else leaf.shape[-1])
+            std = leaf.scale / np.sqrt(max(fan_in, 1))
+            arr = (jax.random.normal(key, leaf.shape, jnp.float32) * std).astype(dt)
+        elif leaf.init == "rglru_a":
+            # RG-LRU forget-gate param: softplus-inverse of decay in [0.9, 0.999]
+            u = jax.random.uniform(key, leaf.shape, jnp.float32, 0.9, 0.999)
+            arr = jnp.log(jnp.expm1(-jnp.log(u))).astype(dt)  # softplus^-1(-log a)
+        elif leaf.init == "ssm_a":
+            # mamba2 A_log: log of uniform [1, 16]
+            u = jax.random.uniform(key, leaf.shape, jnp.float32, 1.0, 16.0)
+            arr = jnp.log(u).astype(dt)
+        elif leaf.init == "ssm_dt":
+            # dt bias: softplus^-1 of uniform log-spaced [1e-3, 1e-1]
+            lo, hi = np.log(1e-3), np.log(1e-1)
+            u = jnp.exp(jax.random.uniform(key, leaf.shape, jnp.float32, lo, hi))
+            arr = (u + jnp.log(-jnp.expm1(-u))).astype(dt)
+        else:
+            raise ValueError(f"unknown init {leaf.init!r}")
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def _stable_hash(s: str) -> int:
+    """Deterministic across processes (unlike builtin hash)."""
+    h = 2166136261
+    for ch in s.encode():
+        h = ((h ^ ch) * 16777619) & 0x7FFFFFFF
+    return h
+
+
+def count_params(tree) -> int:
+    sizes = [int(np.prod(l.shape)) for l in jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, (P, jax.ShapeDtypeStruct)))]
+    return int(sum(sizes))

@@ -1,0 +1,42 @@
+"""LR schedules as pure functions of the step counter.
+
+Schedule *state* is just (name, hyperparams, step) — upper-half data.
+Runtime overrides (ScheduleSet ops) multiply on top and replay with the
+op-log, so a mid-run LR touch-up survives restart.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ScheduleConfig:
+    kind: str = "warmup_cosine"     # warmup_cosine | warmup_linear | constant
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_ratio: float = 0.1
+
+
+def schedule_lr(cfg: ScheduleConfig, step, overrides: Dict[str, float] = None):
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.kind == "constant":
+        base = jnp.float32(1.0)
+    elif cfg.kind == "warmup_linear":
+        frac = jnp.clip((s - cfg.warmup_steps) /
+                        max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        base = 1.0 - (1.0 - cfg.min_ratio) * frac
+    else:  # warmup_cosine
+        frac = jnp.clip((s - cfg.warmup_steps) /
+                        max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(np.pi * frac))
+        base = cfg.min_ratio + (1.0 - cfg.min_ratio) * cos
+    lr = cfg.peak_lr * warm * base
+    if overrides and "lr_scale" in overrides:
+        lr = lr * overrides["lr_scale"]
+    return lr

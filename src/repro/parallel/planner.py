@@ -1,0 +1,187 @@
+"""Auto-sharding planner: choose a ParallelPlan per (arch, shape, mesh)
+cell from analytic memory estimates against the target HBM budget.
+
+TPU v5e targets (per chip): 16 GiB HBM, 197 bf16 TFLOP/s, 819 GB/s HBM
+bandwidth, ~50 GB/s ICI. The planner escalates sharding depth until the
+estimate fits:
+
+  train:  TP -> +FSDP(ZeRO-3) -> +seq-shard activations -> +grad_accum
+  serve:  TP -> +2D weight sharding -> +KV-cache seq sharding
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.parallel.sharding import ParallelPlan, train_rules, serve_rules
+
+HBM_BYTES = 16 * 1024**3
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def _mesh_sizes(mesh) -> Tuple[int, int, int]:
+    ax = dict(mesh.shape)
+    pod = int(ax.get("pod", 1))
+    return pod, int(ax["data"]), int(ax["model"])
+
+
+def _bytes_per_param(dtype: str = "bfloat16") -> int:
+    return 2 if "16" in dtype else 4
+
+
+@dataclass
+class MemoryEstimate:
+    params: float
+    opt_state: float
+    activations: float
+    kv_cache: float
+    total: float
+
+    def fits(self, budget: float = 0.9 * HBM_BYTES) -> bool:
+        return self.total < budget
+
+
+def estimate_train_memory(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                          fsdp: bool, seq_shard: bool, grad_accum: int,
+                          moments_bytes: int = 1) -> MemoryEstimate:
+    """Per-chip bytes. moments_bytes: 1 (int8 block-quantized AdamW
+    moments, the default distributed-opt trick) or 4 (f32)."""
+    pod, dp, tp = _mesh_sizes(mesh)
+    n = cfg.n_params()
+    bp = _bytes_per_param(cfg.dtype)
+    model_shards = tp
+    data_shards = pod * dp
+    pshards = model_shards * (data_shards if fsdp else 1)
+    params = n * bp / pshards
+    # moments (m, v) + f32 grad accumulator only when grad_accum > 1
+    opt = n * (2 * moments_bytes) / pshards
+    grads = n * bp / pshards if grad_accum > 1 else 0.0
+
+    # activations: with full remat we hold one residual per layer boundary
+    # (+ the logits/softmax transient, counted at 3x logits bytes)
+    b_local = shape.global_batch / data_shards / grad_accum
+    toks = b_local * shape.seq_len
+    seq_div = tp if seq_shard else 1
+    resid = toks * cfg.d_model * bp / seq_div
+    depth = cfg.n_layers + (cfg.n_encoder_layers or 0)
+    acts = resid * (depth + 2)
+    logits = toks * cfg.vocab_size * bp / tp * 3
+    acts += logits
+    total = params + opt + grads + acts
+    return MemoryEstimate(params, opt + grads, acts, 0.0, total)
+
+
+def estimate_serve_memory(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                          depth: int, cache_seq_shard: bool) -> MemoryEstimate:
+    pod, dp, tp = _mesh_sizes(mesh)
+    n = cfg.n_params()
+    bp = _bytes_per_param(cfg.dtype)
+    pshards = tp * ((pod * dp) if depth >= 2 else 1)
+    params = n * bp / pshards
+
+    # KV cache / recurrent state
+    data_shards = pod * dp
+    b_eff = max(shape.global_batch / data_shards, 1)
+    if cfg.family == "ssm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        nh = d_in // cfg.ssm_head_dim
+        per_layer = b_eff * (nh * cfg.ssm_head_dim * cfg.ssm_state * 4 / tp
+                             + 3 * d_in * bp)
+        cache = per_layer * cfg.n_layers
+    elif cfg.family == "hybrid":
+        w = cfg.rglru_width or cfg.d_model
+        n_attn = sum(1 for i in range(cfg.n_layers)
+                     if cfg.block_pattern[i % len(cfg.block_pattern)] == "attn")
+        n_rec = cfg.n_layers - n_attn
+        win = min(cfg.attn_window or shape.seq_len, shape.seq_len)
+        kv = b_eff * win * cfg.n_kv_heads * cfg.resolved_head_dim * 2 * bp
+        cache = n_attn * kv + n_rec * b_eff * w * (4 + 3 * bp)
+    else:
+        smax = min(cfg.attn_window, shape.seq_len) if cfg.attn_window else shape.seq_len
+        seq_div = tp if cache_seq_shard else (
+            tp if cfg.n_kv_heads % tp == 0 else 1)
+        kv = b_eff * smax * cfg.n_kv_heads * cfg.resolved_head_dim * 2 * bp / seq_div
+        depth_l = cfg.n_layers
+        cache = kv * depth_l
+        if cfg.is_encoder_decoder:
+            cache += (b_eff * cfg.encoder_seq * cfg.n_kv_heads *
+                      cfg.resolved_head_dim * 2 * bp) * cfg.n_layers
+
+    acts = b_eff * max(shape.seq_len if shape.kind == "prefill" else 1, 1) \
+        * cfg.d_model * bp * 4
+    total = params + cache + acts
+    return MemoryEstimate(params, 0.0, acts, cache, total)
+
+
+def make_plan(cfg: ModelConfig, shape: ShapeConfig, mesh) -> ParallelPlan:
+    """Escalating search for a fitting plan (see module docstring)."""
+    pod, dp, tp = _mesh_sizes(mesh)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    if shape.kind == "train":
+        # seq-shard (Megatron SP) is on from the start: it divides
+        # activation residency by TP at no FLOP cost (ag/rs replaces the
+        # TP all-reduce, same bytes), and dry-runs confirmed TP-only
+        # plans blow the 16 GiB budget on activation temps. FSDP likewise:
+        # any param whose model-parallel axis doesn't divide TP (e.g.
+        # starcoder2's 24 heads on TP=16) falls back to replication, and
+        # only the data-axis shard keeps its optimizer state bounded.
+        #
+        # grad_accum only shrinks *activations*; if params+opt alone
+        # exceed the budget, escalating accum multiplies the FSDP
+        # weight-gather collectives (16x observed on kimi-k2) for zero
+        # memory benefit — so check the static part first.
+        est1 = estimate_train_memory(cfg, shape, mesh, True, True, 1)
+        static = est1.params + est1.opt_state
+        budget = 0.9 * HBM_BYTES
+        if static > budget:
+            return ParallelPlan(
+                rules=train_rules(True, batch_axes), batch_axes=batch_axes,
+                remat="full", seq_shard=True, grad_accum=1,
+                notes=f"train OVERBUDGET static={static/2**30:.1f}GiB "
+                      f"est={est1.total/2**30:.1f}GiB (params+opt exceed "
+                      f"HBM at this chip count; accum would only add "
+                      f"gather traffic — needs the multi-pod mesh)",
+            )
+        for accum in (1, 4, 16):
+            est = estimate_train_memory(cfg, shape, mesh, True, True, accum)
+            if est.fits():
+                return ParallelPlan(
+                    rules=train_rules(True, batch_axes),
+                    batch_axes=batch_axes,
+                    remat="full",
+                    seq_shard=True,
+                    grad_accum=accum,
+                    notes=f"train fsdp=True seq_shard=True "
+                          f"accum={accum} est={est.total/2**30:.1f}GiB",
+                )
+        est = estimate_train_memory(cfg, shape, mesh, True, True, 16)
+        return ParallelPlan(
+            rules=train_rules(True, batch_axes), batch_axes=batch_axes,
+            remat="full", seq_shard=True, grad_accum=16,
+            notes=f"train OVERBUDGET est={est.total/2**30:.1f}GiB "
+                  f"(needs more chips; fits on multi-pod? see EXPERIMENTS)",
+        )
+
+    # serving (prefill / decode)
+    for depth, cache_seq in ((1, False), (2, False), (2, True)):
+        est = estimate_serve_memory(cfg, shape, mesh, depth, cache_seq)
+        if est.fits():
+            break
+    cache_axis = "model" if (
+        cache_seq or (cfg.n_kv_heads and tp and cfg.n_kv_heads % tp != 0
+                      and cfg.family not in ("ssm",))) else None
+    return ParallelPlan(
+        rules=serve_rules(depth, batch_axes),
+        batch_axes=batch_axes,
+        remat="none",
+        seq_shard=False,
+        cache_seq_axis=cache_axis,
+        notes=f"serve depth={depth} cache_seq={cache_axis} "
+              f"est={est.total/2**30:.1f}GiB",
+    )

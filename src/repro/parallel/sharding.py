@@ -1,0 +1,170 @@
+"""Logical-axis sharding: rules map logical axis names (declared once in
+the parameter templates) to mesh axes, yielding NamedShardings.
+
+This is the boundary the paper's split-state design depends on: the upper
+half stores *logical* specs only; binding to a concrete mesh happens here,
+at restore/lowering time, so a checkpoint taken on one topology
+materializes on another (elastic restart).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+AxisTarget = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    """A complete distribution decision for one (arch, shape, mesh) cell."""
+
+    rules: Dict[str, AxisTarget]          # logical axis -> mesh axis target
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: Optional[str] = "model"
+    remat: str = "full"                   # none | full
+    seq_shard: bool = False               # sequence parallelism on residual
+    cache_seq_axis: Optional[str] = None  # shard KV-cache seq dim (decode)
+    grad_accum: int = 1
+    # force Megatron-style interior activation resharding instead of
+    # XLA's weight-gather choice. Measured a REGRESSION at B_local=16
+    # on all three hillclimb cells (EXPERIMENTS §Perf iter3) — weight
+    # gathers are cheaper than activation reshards at small per-chip
+    # batch; kept as an opt-in for large-batch plans.
+    interior_tp: bool = False
+    notes: str = ""
+
+    def rule(self, name: Optional[str]) -> AxisTarget:
+        if name is None:
+            return None
+        return self.rules.get(name)
+
+    def with_(self, **kw) -> "ParallelPlan":
+        return replace(self, **kw)
+
+
+def spec_for_axes(plan: ParallelPlan, axes: Sequence[Optional[str]],
+                  shape: Optional[Sequence[int]] = None,
+                  mesh: Optional[Mesh] = None) -> PartitionSpec:
+    """logical axes tuple -> PartitionSpec, dropping assignments that do
+    not divide the dimension (e.g. kv_heads=8 over model=16 falls back to
+    replication, the standard GQA choice)."""
+    used = set()
+    out = []
+    for i, name in enumerate(axes):
+        tgt = plan.rule(name)
+        if tgt is None:
+            out.append(None)
+            continue
+        tgt_tuple = (tgt,) if isinstance(tgt, str) else tuple(tgt)
+        # drop already-used axes (a mesh axis may appear once per spec)
+        tgt_tuple = tuple(a for a in tgt_tuple if a not in used)
+        if not tgt_tuple:
+            out.append(None)
+            continue
+        if shape is not None and mesh is not None:
+            div = int(np.prod([mesh.shape[a] for a in tgt_tuple]))
+            if shape[i] % div != 0:
+                out.append(None)
+                continue
+        used.update(tgt_tuple)
+        out.append(tgt_tuple[0] if len(tgt_tuple) == 1 else tgt_tuple)
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def tree_shardings(plan: ParallelPlan, logical_tree, abstract_tree, mesh: Mesh):
+    """Map (logical-axes pytree, ShapeDtypeStruct pytree) -> NamedShardings."""
+
+    def f(axes, ab):
+        spec = spec_for_axes(plan, axes, ab.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(f, logical_tree, abstract_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+def tree_specs(plan: ParallelPlan, logical_tree, abstract_tree, mesh: Mesh):
+    def f(axes, ab):
+        return spec_for_axes(plan, axes, ab.shape, mesh)
+
+    return jax.tree.map(f, logical_tree, abstract_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            a is None or isinstance(a, str) for a in x))
+
+
+# ---------------------------------------------------------------------------
+# standard rule sets
+# ---------------------------------------------------------------------------
+
+def train_rules(fsdp: bool, batch_axes: Tuple[str, ...]) -> Dict[str, AxisTarget]:
+    """Megatron-style TP (+ optional ZeRO-3 FSDP over the data axes)."""
+    emb: AxisTarget = tuple(batch_axes) if fsdp else None
+    return {
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",     # falls back to replication if indivisible
+        "ff": "model",
+        "experts": "model",
+        "embed": emb,
+        "layers": None,
+    }
+
+
+def serve_rules(depth: int, batch_axes: Tuple[str, ...]) -> Dict[str, AxisTarget]:
+    """depth 1: TP only. depth 2: 2D weight sharding (TP + weight
+    sharding over the data axes — activations all-reduce over data, the
+    PaLM-style weight-stationary layout for models too big for TP=16)."""
+    emb: AxisTarget = tuple(batch_axes) if depth >= 2 else None
+    return {
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "experts": "model",
+        "embed": emb,
+        "layers": None,
+    }
+
+
+# ---------------------------------------------------------------------------
+# activation / batch specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(plan: ParallelPlan) -> PartitionSpec:
+    """[B, S] token batches: batch over data(+pod)."""
+    b = plan.batch_axes[0] if len(plan.batch_axes) == 1 else tuple(plan.batch_axes)
+    return PartitionSpec(b, None)
+
+
+def activation_spec(plan: ParallelPlan) -> PartitionSpec:
+    """Residual stream [B, S, D]."""
+    b = plan.batch_axes[0] if len(plan.batch_axes) == 1 else tuple(plan.batch_axes)
+    seq = plan.model_axis if plan.seq_shard else None
+    return PartitionSpec(b, seq, None)
+
+
+def logits_spec(plan: ParallelPlan) -> PartitionSpec:
+    b = plan.batch_axes[0] if len(plan.batch_axes) == 1 else tuple(plan.batch_axes)
+    return PartitionSpec(b, None, "model")
+
+
+def cache_entry_spec(plan: ParallelPlan, entry_shape, kv_heads: int,
+                     mesh: Mesh):
+    """KV cache [B, S, Hkv, hd] (+leading layer dim handled by caller)."""
+    b = plan.batch_axes[0] if len(plan.batch_axes) == 1 else tuple(plan.batch_axes)
+    bsz = entry_shape[0]
+    bdiv = int(np.prod([mesh.shape[a] for a in plan.batch_axes]))
+    if bsz % bdiv != 0:
+        b = None
+    m = plan.model_axis
+    if m is not None and kv_heads % mesh.shape[m] == 0 and plan.cache_seq_axis is None:
+        return PartitionSpec(b, None, m, None)
+    if plan.cache_seq_axis is not None:
+        return PartitionSpec(b, plan.cache_seq_axis, None, None)
+    return PartitionSpec(b, None, None, None)

@@ -1,0 +1,108 @@
+"""Sharded decode-state allocation (KV caches, SSM states, RG-LRU
+hiddens) and their shardings.
+
+Caches are lower-half resources: allocated through the logged runtime API
+(CacheAlloc), referenced by virtual ids, re-allocated fresh at restore by
+replay. For *serving* restores, the cache contents can optionally be
+checkpointed as an upper-half entry (they're semantic: the conversation's
+context) — see engine.snapshot_cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig
+from repro.configs import registry as cfg_registry
+from repro.models import model as M
+from repro.parallel.sharding import ParallelPlan
+
+
+def cache_shardings(cfg: ModelConfig, plan: ParallelPlan, mesh,
+                    spec_tree) -> Any:
+    """Pattern-match cache leaves by path to assign shardings.
+
+    Layout rules (see DESIGN.md §5):
+      k/v      [L, B, S, Hkv, hd] -> batch over data; kv-heads over model
+               when divisible, else seq over model (flash-decoding combine)
+      pos      [L, B, S]          -> batch over data
+      ssm state[L, B, H, hd, ds]  -> heads over model
+      rg state [L?, B, W]         -> width over model
+      conv     [...]              -> batch over data only
+    """
+    b_axes = plan.batch_axes[0] if len(plan.batch_axes) == 1 \
+        else tuple(plan.batch_axes)
+    m = plan.model_axis
+    bdiv = int(np.prod([mesh.shape[a] for a in plan.batch_axes]))
+    msize = int(mesh.shape[m]) if m else 1
+
+    def leaf_spec(path: str, ab) -> PartitionSpec:
+        shape = ab.shape
+        batch_dim = 1 if len(shape) >= 2 else 0  # leading dim = layers
+        b = b_axes if shape[batch_dim] % bdiv == 0 else None
+        import re
+        keys = re.findall(r"'(\w+)'", path)
+        name = keys[-1] if keys else ""
+        if name == "state" and len(shape) == 5:      # ssm [L,B,H,hd,ds]
+            if m and shape[2] % msize == 0:
+                return PartitionSpec(None, b, m, None, None)
+            return PartitionSpec(None, b, None, None, None)
+        if name == "state" and len(shape) == 3:      # rg [L,B,W]
+            if m and shape[2] % msize == 0:
+                return PartitionSpec(None, b, m)
+            return PartitionSpec(None, b, None)
+        if name == "pos":
+            return PartitionSpec(None, b, None)
+        if name in ("k", "v") or len(shape) == 5:    # [L,B,S,Hkv,hd]
+            if m and shape[3] % msize == 0 and plan.cache_seq_axis is None:
+                return PartitionSpec(None, b, None, m, None)
+            if plan.cache_seq_axis and shape[2] % msize == 0:
+                return PartitionSpec(None, b, plan.cache_seq_axis, None, None)
+            return PartitionSpec(None, b, None, None, None)
+        # conv states & misc: batch only
+        return PartitionSpec(*([None, b] + [None] * (len(shape) - 2))[:len(shape)])
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(spec_tree)
+    out = []
+    for p, ab in leaves:
+        ps = leaf_spec(jax.tree_util.keystr(p), ab)
+        out.append(NamedSharding(mesh, ps))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return M.cache_spec(cfg, batch, max_seq)
+
+
+def allocate_cache(arch: str, batch: int, max_seq: int, lower) -> Any:
+    """Materialize a zeroed cache on the lower half's mesh (CacheAlloc)."""
+    if arch in cfg_registry.ARCH_IDS:
+        cfg = cfg_registry.get_config(arch)
+    else:
+        cfg = cfg_registry.get_smoke_config(arch.removesuffix("-smoke"))
+    try:
+        mesh = lower.mesh
+    except Exception:
+        mesh = None
+    if mesh is None:
+        return M.init_cache(cfg, batch, max_seq)
+    from repro.parallel.planner import make_plan
+    from repro.configs.base import ShapeConfig
+    shape = ShapeConfig("alloc", max_seq, batch, "decode")
+    plan = make_plan(cfg, shape, mesh)
+    spec_tree = M.cache_spec(cfg, batch, max_seq)
+    shardings = cache_shardings(cfg, plan, mesh, spec_tree)
+
+    # build zeros directly sharded (no host materialization)
+    def build():
+        def z(ab):
+            if ab.dtype == jnp.int32:
+                return jnp.full(ab.shape, -1, jnp.int32)
+            return jnp.zeros(ab.shape, ab.dtype)
+        return jax.tree.map(z, spec_tree)
+
+    return jax.jit(build, out_shardings=shardings)()

@@ -1,0 +1,226 @@
+"""Trainer: the end-to-end integration of the paper's split-state C/R
+with the training substrate.
+
+Normal operation:  every runtime-mutating call (mesh, compile, data
+advance, schedule touch) goes through the logged LowerHalf API; semantic
+state lives in the UpperHalf; CheckpointManager snapshots the upper half
+in the background.
+
+Crash:             the process (or pod) dies. Nothing to do.
+
+Restore:           Trainer.restore() = fresh LowerHalf + op-log replay
+(recompiles the step executable, reapplies schedule/data ops) + upper
+half rematerialized onto the (possibly different!) mesh. Continuation is
+bitwise-identical to the uninterrupted run — tested.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import registry as cfg_registry
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import (CheckpointManager, LowerHalf, UpperHalf,
+                        fresh_lower_half, materialize_entry)
+from repro.core.restore import restore_scalar
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import model as M
+from repro.optim import (AdamWConfig, ScheduleConfig, abstract_opt_state,
+                         init_opt_state, opt_logical_specs)
+from repro.parallel.planner import make_plan
+from repro.train import step as step_lib
+
+
+@dataclass
+class TrainJob:
+    arch: str                  # registry id, or "<id>-smoke"
+    shape_key: str
+    init_seed: int = 0
+    data_seed: int = 1234
+    plan_overrides: Optional[Dict[str, Any]] = None
+
+    @property
+    def plan_key(self) -> str:
+        return json.dumps(self.plan_overrides) if self.plan_overrides else ""
+
+
+def _resolve_cfg(arch: str) -> ModelConfig:
+    if arch in cfg_registry.ARCH_IDS:
+        return cfg_registry.get_config(arch)
+    return cfg_registry.get_smoke_config(arch.removesuffix("-smoke"))
+
+
+class Trainer:
+    def __init__(self, job: TrainJob, mesh_shape, mesh_axes,
+                 manager: Optional[CheckpointManager] = None,
+                 _restored=None):
+        self.job = job
+        self.cfg = _resolve_cfg(job.arch)
+        self.shape = cfg_registry.get_shape(job.shape_key)
+        self.manager = manager
+
+        if _restored is None:
+            self.lower = LowerHalf()
+            self.lower.mesh_create(mesh_shape, mesh_axes)
+            self.vexec = self.lower.compile_step(
+                "train_step", job.arch, job.shape_key, job.plan_key)
+        else:
+            self.lower, self.vexec = _restored
+
+        mesh = self.lower.mesh
+        self.plan = make_plan(self.cfg, self.shape, mesh)
+        if job.plan_overrides:
+            self.plan = self.plan.with_(**job.plan_overrides)
+        self.opt_cfg = AdamWConfig(quantize_moments=self.cfg.n_params() > 5e10)
+        self.pshard, self.oshard = step_lib.train_state_shardings(
+            self.cfg, self.plan, mesh, self.opt_cfg)
+
+        # n_shards is a DATA-layout constant (one shard per batch row),
+        # never a topology property: batches must be bit-identical across
+        # mesh shapes or elastic restore would silently change the data
+        # stream (caught by tests/test_elastic_multidev.py).
+        dcfg = DataConfig(
+            seed=job.data_seed, vocab_size=self.cfg.vocab_size,
+            seq_len=self.shape.seq_len, global_batch=self.shape.global_batch,
+            n_shards=self.shape.global_batch,
+            frames=self.cfg.encoder_seq if self.cfg.is_encoder_decoder else 0,
+            frame_dim=self.cfg.frontend_dim)
+        self.pipeline = TokenPipeline(dcfg)
+        if self.lower.data_assignment:
+            self.pipeline.reassign(self.lower.data_assignment)
+
+        self.upper = UpperHalf()
+        self._binputs = step_lib.train_input_specs(self.cfg, self.shape)
+        self._bshard = step_lib.batch_shardings(self.plan, mesh, self._binputs)
+
+    # --- state construction -------------------------------------------------
+
+    def init_state(self) -> None:
+        """Fresh start: initialize params/opt on-mesh and register the
+        upper half."""
+        rng = jax.random.PRNGKey(self.job.init_seed)
+        init = jax.jit(lambda r: M.init_params(self.cfg, r),
+                       out_shardings=self.pshard)
+        params = init(rng)
+        opt_state = jax.jit(
+            lambda p: init_opt_state(p, self.opt_cfg),
+            out_shardings=self.oshard)(params)
+        logical = M.logical_specs(self.cfg)
+        self.upper.register("params", "params", params, logical)
+        self.upper.register("opt_state", "opt_state", opt_state,
+                            opt_logical_specs(logical, self.opt_cfg))
+        self.upper.register("step", "step", np.int64(0))
+        self.upper.register("data_cursor", "data_cursor", np.int64(0))
+        self.upper.register("rng_seed", "rng",
+                            np.int64(self.job.init_seed))
+
+    # --- stepping ---------------------------------------------------------
+
+    def _device_batch(self, batch_np):
+        return {k: jax.device_put(v, self._bshard[k])
+                for k, v in batch_np.items()}
+
+    def train_steps(self, n: int) -> Dict[str, float]:
+        fn = self.lower.executable(self.vexec)
+        params = self.upper.get("params")
+        opt_state = self.upper.get("opt_state")
+        step = int(self.upper.get("step"))
+        cursor = int(self.upper.get("data_cursor"))
+        lr_scale = jnp.float32(
+            self.lower.schedule_overrides.get("lr_scale", 1.0))
+        metrics = {}
+        for _ in range(n):
+            batch = self._device_batch(self.pipeline.batch_at(cursor))
+            params, opt_state, metrics = fn(
+                params, opt_state, batch, jnp.int32(step), lr_scale)
+            step += 1
+            cursor += 1
+            self.lower.data_advance(1)
+        self.upper.update("params", params)
+        self.upper.update("opt_state", opt_state)
+        self.upper.update("step", np.int64(step))
+        self.upper.update("data_cursor", np.int64(cursor))
+        return {k: float(np.asarray(jax.device_get(v)))
+                for k, v in metrics.items()}
+
+    # --- checkpoint / restore ------------------------------------------------
+
+    def job_meta(self) -> Dict[str, Any]:
+        return {"arch": self.job.arch, "shape_key": self.job.shape_key,
+                "plan_key": self.job.plan_key,
+                "init_seed": self.job.init_seed,
+                "data_seed": self.job.data_seed}
+
+    def save(self, block: bool = True) -> None:
+        assert self.manager is not None
+        self.manager.save(int(self.upper.get("step")), self.upper,
+                          self.lower.oplog, block=block,
+                          job_meta=self.job_meta())
+
+    @classmethod
+    def restore(cls, manager: CheckpointManager,
+                mesh_factory: Optional[Callable] = None,
+                step: Optional[int] = None) -> "Trainer":
+        restored = manager.restore(step)
+        jm = restored.manifest["job"]
+        job = TrainJob(arch=jm["arch"], shape_key=jm["shape_key"],
+                       init_seed=jm.get("init_seed", 0),
+                       data_seed=jm.get("data_seed", 1234),
+                       plan_overrides=json.loads(jm["plan_key"])
+                       if jm.get("plan_key") else None)
+
+        # 1-2: fresh lower half + replay (recompile, reapply runtime ops)
+        lower = fresh_lower_half(restored, mesh_factory=mesh_factory)
+        # find the train executable vid (last Compile of train_step)
+        from repro.core.oplog import Compile
+        vexec = None
+        for op in lower.oplog.ops:
+            if isinstance(op, Compile) and op.fn_name == "train_step":
+                vexec = op.vexec
+        assert vexec is not None, "no train_step Compile in the log"
+
+        t = cls(job, None, None, manager=manager, _restored=(lower, vexec))
+
+        # 3: rematerialize the upper half on the (new) mesh
+        cfg, plan, mesh = t.cfg, t.plan, lower.mesh
+        ab_params = M.init_abstract(cfg)
+        logical = M.logical_specs(cfg)
+        params = materialize_entry(restored, "params", ab_params, plan,
+                                   mesh, logical)
+        ab_opt = abstract_opt_state(ab_params, t.opt_cfg)
+        olog = opt_logical_specs(logical, t.opt_cfg)
+        opt_state = materialize_entry(restored, "opt_state", ab_opt, plan,
+                                      mesh, olog)
+        t.upper.register("params", "params", params, logical)
+        t.upper.register("opt_state", "opt_state", opt_state, olog)
+        t.upper.register("step", "step",
+                         np.int64(restore_scalar(restored, "step")))
+        t.upper.register("data_cursor", "data_cursor",
+                         np.int64(restore_scalar(restored, "data_cursor")))
+        t.upper.register("rng_seed", "rng",
+                         np.int64(restore_scalar(restored, "rng_seed")))
+        return t
+
+    # --- observability ---------------------------------------------------------
+
+    def params_digest(self) -> str:
+        import hashlib
+        h = hashlib.blake2b(digest_size=16)
+        for path, arr in sorted(
+                (p, v) for p, v in
+                _flatten(self.upper.get("params"))):
+            h.update(path.encode())
+            h.update(np.ascontiguousarray(
+                np.asarray(jax.device_get(arr))).tobytes())
+        return h.hexdigest()
+
+
+def _flatten(tree):
+    from repro.core.split_state import flatten_with_paths
+    return flatten_with_paths(tree)

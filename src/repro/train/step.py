@@ -1,0 +1,292 @@
+"""Train / eval step construction: loss, grads, optimizer update, all
+under pjit with plan-derived shardings; microbatch gradient accumulation
+via lax.scan; registered in the C/R function registry so Compile ops can
+rebuild the executable at restore.
+"""
+from __future__ import annotations
+
+import functools
+import json
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs import registry as cfg_registry
+from repro.models import model as M
+from repro.optim import (AdamWConfig, ScheduleConfig, init_opt_state,
+                         abstract_opt_state, apply_updates, schedule_lr)
+from repro.parallel import context as pctx
+from repro.parallel.sharding import (ParallelPlan, activation_spec,
+                                     batch_spec, logits_spec, tree_specs)
+from repro.parallel.planner import make_plan
+from repro.core.split_state import register_step_fn
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean CE over all tokens, f32. logits [B,S,V]; targets [B,S].
+
+    Vocab-parallel formulation: the gold logit is extracted with a masked
+    reduction over the (model-sharded) vocab axis rather than a gather —
+    a gather along a sharded axis makes XLA all-gather the full [B,S,V]
+    f32 logits (observed: +13 GiB/chip temp on starcoder2 train_4k); the
+    reduction keeps every operand vocab-sharded and lowers to one tiny
+    all-reduce (Megatron's vocab-parallel CE)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    v = lf.shape[-1]
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    gold_mask = vocab_ids == targets[..., None].astype(jnp.int32)
+    gold = jnp.sum(jnp.where(gold_mask, lf, 0.0), axis=-1)
+    return jnp.mean(lse - gold)
+
+
+def make_call_options(plan: ParallelPlan, mesh) -> M.CallOptions:
+    act = None
+    logit = None
+    if mesh is not None:
+        aspec = activation_spec(plan)
+        lspec = logits_spec(plan)
+
+        def act_fn(x):
+            if x.ndim != 3:
+                return x
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, aspec))
+
+        def logit_fn(x):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, lspec))
+
+        act, logit = act_fn, logit_fn
+    return M.CallOptions(remat=plan.remat, act_constraint=act,
+                         logit_constraint=logit)
+
+
+def make_tp_constraint(plan: ParallelPlan, mesh):
+    """Interior TP constraint for layers._TP_CONSTRAINT: pin the
+    model-parallel dim of MLP hidden / attention-head activations so the
+    partitioner reshards activations (Megatron ag/rs) instead of
+    all-gathering weights to full (EXPERIMENTS §Perf iter3)."""
+    if mesh is None or plan.model_axis is None or not plan.interior_tp:
+        return None
+    m = plan.model_axis
+    msize = int(mesh.shape[m])
+    b = plan.batch_axes[0] if len(plan.batch_axes) == 1 \
+        else tuple(plan.batch_axes)
+
+    def fn(x, dim):
+        nd = x.ndim
+        if nd < 2:
+            return x
+        dim = dim % nd
+        if x.shape[dim] % msize != 0:
+            return x  # e.g. GQA kv heads < TP: stay replicated
+        spec = [None] * nd
+        spec[0] = b
+        spec[dim] = m
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PartitionSpec(*spec)))
+
+    return fn
+
+
+def make_loss_fn(cfg: ModelConfig, opts: M.CallOptions):
+    def loss_fn(params, batch):
+        logits, aux = M.forward_train(cfg, params, batch, opts)
+        ce = cross_entropy(logits, batch["targets"])
+        loss = ce + aux.get("moe_aux", 0.0)
+        return loss, {"ce": ce, "moe_aux": aux.get("moe_aux", 0.0)}
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    plan: ParallelPlan,
+    opt_cfg: AdamWConfig,
+    sched_cfg: ScheduleConfig,
+    mesh=None,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch, step, lr_scale)
+    -> (params, opt_state, metrics). Pure; jit-able; grad accumulation
+    per plan.grad_accum."""
+    opts = make_call_options(plan, mesh)
+    loss_fn = make_loss_fn(cfg, opts)
+    accum = max(plan.grad_accum, 1)
+
+    def train_step(params, opt_state, batch, step, lr_scale):
+        if accum == 1:
+            (loss, parts), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                     g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss_sum), _ = jax.lax.scan(micro, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            parts = {"ce": loss, "moe_aux": jnp.zeros((), jnp.float32)}
+
+        lr = schedule_lr(sched_cfg, step) * lr_scale
+        params, opt_state, om = apply_updates(params, grads, opt_state,
+                                              opt_cfg, lr)
+        metrics = {"loss": loss, **parts, **om,
+                   "step": step.astype(jnp.int32) + 1}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, plan: ParallelPlan, mesh=None):
+    opts = make_call_options(plan, mesh)
+    loss_fn = make_loss_fn(cfg, opts)
+
+    def eval_step(params, batch):
+        loss, parts = loss_fn(params, batch)
+        return {"loss": loss, **parts}
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# sharded jit assembly
+# ---------------------------------------------------------------------------
+
+def train_state_shardings(cfg: ModelConfig, plan: ParallelPlan, mesh,
+                          opt_cfg: AdamWConfig):
+    """(param_shardings, opt_shardings) NamedSharding pytrees."""
+    ab_params = M.init_abstract(cfg)
+    logical = M.logical_specs(cfg)
+    pspecs = tree_specs(plan, logical, ab_params, mesh)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    from repro.optim import opt_logical_specs
+    ab_opt = abstract_opt_state(ab_params, opt_cfg)
+    olog = opt_logical_specs(logical, opt_cfg)
+    ospecs = tree_specs(plan, olog, ab_opt, mesh)
+    oshard = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs)
+    return pshard, oshard
+
+
+def batch_shardings(plan: ParallelPlan, mesh, batch_spec_tree):
+    bspec = batch_spec(plan)
+
+    def f(ab):
+        nd = len(ab.shape)
+        spec = PartitionSpec(*(list(bspec) + [None] * (nd - 2))[:nd])
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(f, batch_spec_tree)
+
+
+class ContextualJit:
+    """Wraps a jitted callable so that tracing/lowering always happens
+    inside the mesh context (MoE shard_map and the interior TP constraint
+    read it at trace time)."""
+
+    def __init__(self, jitted, mesh, plan: ParallelPlan):
+        self.jitted = jitted
+        self.mesh = mesh
+        self.plan = plan
+
+    def _enter(self):
+        from repro.models import layers as L
+        tok = L.set_tp_constraint(make_tp_constraint(self.plan, self.mesh))
+        return tok
+
+    def __call__(self, *args, **kw):
+        from repro.models import layers as L
+        tok = self._enter()
+        try:
+            with pctx.mesh_context(self.mesh, self.plan.batch_axes,
+                                   self.plan.model_axis):
+                return self.jitted(*args, **kw)
+        finally:
+            L._TP_CONSTRAINT.reset(tok)
+
+    def lower(self, *args, **kw):
+        from repro.models import layers as L
+        tok = self._enter()
+        try:
+            with pctx.mesh_context(self.mesh, self.plan.batch_axes,
+                                   self.plan.model_axis):
+                return self.jitted.lower(*args, **kw)
+        finally:
+            L._TP_CONSTRAINT.reset(tok)
+
+
+def jit_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                   plan: Optional[ParallelPlan] = None,
+                   opt_cfg: Optional[AdamWConfig] = None,
+                   sched_cfg: Optional[ScheduleConfig] = None,
+                   donate: bool = True):
+    """Build the sharded, jittable train step + its input specs."""
+    plan = plan or make_plan(cfg, shape, mesh)
+    opt_cfg = opt_cfg or AdamWConfig(
+        quantize_moments=cfg.n_params() > 5e10)
+    sched_cfg = sched_cfg or ScheduleConfig()
+    fn = make_train_step(cfg, plan, opt_cfg, sched_cfg, mesh)
+
+    pshard, oshard = train_state_shardings(cfg, plan, mesh, opt_cfg)
+    binputs = train_input_specs(cfg, shape)
+    bshard = batch_shardings(plan, mesh, binputs)
+    scalar = NamedSharding(mesh, PartitionSpec())
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=(pshard, oshard, bshard, scalar, scalar),
+        out_shardings=(pshard, oshard, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    wrapped = ContextualJit(jitted, mesh, plan)
+    return wrapped, dict(plan=plan, opt_cfg=opt_cfg, sched_cfg=sched_cfg,
+                         param_shardings=pshard, opt_shardings=oshard,
+                         batch_shardings=bshard, input_specs=binputs)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct stand-ins for a training batch."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.frontend_dim), jnp.float32)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# C/R function-registry builders (Compile ops resolve here)
+# ---------------------------------------------------------------------------
+
+def _plan_from_key(cfg, shape, mesh, plan_key: str) -> ParallelPlan:
+    plan = make_plan(cfg, shape, mesh)
+    if plan_key:
+        plan = plan.with_(**json.loads(plan_key))
+    return plan
+
+
+@register_step_fn("train_step")
+def _build_train_step(arch: str, shape_key: str, plan_key: str, lower):
+    cfg = cfg_registry.get_config(arch) if arch in cfg_registry.ARCH_IDS \
+        else cfg_registry.get_smoke_config(arch.removesuffix("-smoke"))
+    shape = cfg_registry.get_shape(shape_key)
+    mesh = lower.mesh
+    plan = _plan_from_key(cfg, shape, mesh, plan_key)
+    jitted, _ = jit_train_step(cfg, shape, mesh, plan=plan)
+    return jitted

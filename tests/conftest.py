@@ -1,0 +1,31 @@
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run a snippet in a subprocess with N virtual host devices.
+
+    Multi-device tests can't run in the pytest process: jax locks the
+    device count at first init (and smoke tests must see 1 device)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=env, capture_output=True, text=True, timeout=timeout,
+        cwd=REPO)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_with_devices

@@ -1,0 +1,108 @@
+"""Unit tests for the HLO roofline analyzer (parser, trip counts,
+collective accounting, kernel adjustment)."""
+import textwrap
+
+import pytest
+
+from repro.launch.hlo_analysis import (analyze_hlo, parse_hlo,
+                                       roofline_terms, shape_bytes)
+
+
+HLO = textwrap.dedent("""
+    HloModule jit_step
+
+    %add.clone (x.1: f32[], y.1: f32[]) -> f32[] {
+      %x.1 = f32[] parameter(0)
+      %y.1 = f32[] parameter(1)
+      ROOT %add.2 = f32[] add(%x.1, %y.1)
+    }
+
+    %wrapped_compare_computation (p0: s32[], p1: s32[]) -> pred[] {
+      %p0 = s32[] parameter(0)
+      %p1 = s32[] parameter(1)
+      ROOT %cmp = pred[] compare(%p0, %p1), direction=LT
+    }
+
+    %cond.1 (param.0: (s32[], f32[8,16])) -> pred[] {
+      %param.0 = (s32[], f32[8,16]) parameter(0)
+      %constant.9 = s32[] constant(12)
+      %gte.0 = s32[] get-tuple-element(%param.0), index=0
+      ROOT %wrapped_compare = pred[] fusion(%gte.0, %constant.9), kind=kLoop, calls=%wrapped_compare_computation
+    }
+
+    %exp_fusion (p.9: f32[8,16]) -> f32[8,16] {
+      %p.9 = f32[8,16]{1,0} parameter(0)
+      ROOT %e.1 = f32[8,16]{1,0} exponential(%p.9)
+    }
+
+    %body.1 (param.1: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %param.1 = (s32[], f32[8,16]) parameter(0)
+      %gte.1 = s32[] get-tuple-element(%param.1), index=0
+      %gte.2 = f32[8,16]{1,0} get-tuple-element(%param.1), index=1
+      %dot.1 = f32[8,16]{1,0} dot(%gte.2, %gte.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %dot.2 = f32[8,16]{1,0} dot(%dot.1, %gte.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %fe = f32[8,16]{1,0} fusion(%dot.2), kind=kLoop, calls=%exp_fusion
+      %c1 = s32[] constant(1)
+      %next = s32[] add(%gte.1, %c1)
+      ROOT %tuple.1 = (s32[], f32[8,16]) tuple(%next, %fe)
+    }
+
+    ENTRY %main.1 (arg0.1: f32[8,16], arg1.1: f32[128,16]) -> f32[8,16] {
+      %arg0.1 = f32[8,16]{1,0} parameter(0)
+      %arg1.1 = f32[128,16]{1,0} parameter(1)
+      %dot.3 = f32[8,128]{1,0} dot(%arg0.1, %arg1.1), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+      %ar.1 = f32[8,128]{1,0} all-reduce(%dot.3), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add.clone
+      %c0 = s32[] constant(0)
+      %t0 = (s32[], f32[8,16]) tuple(%c0, %arg0.1)
+      %while.1 = (s32[], f32[8,16]) while(%t0), condition=%cond.1, body=%body.1
+      ROOT %out.1 = f32[8,16]{1,0} get-tuple-element(%while.1), index=1
+    }
+""")
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert shape_bytes("bf16[4,4]") == 32
+    assert shape_bytes("(f32[2], s8[8])") == 16
+    assert shape_bytes("f32[]") == 4
+
+
+def test_trip_count_and_flops():
+    counts = analyze_hlo(HLO, assume_bf16=False)
+    assert counts.while_trips == [12]
+    # entry dot: 2*8*128*16; loop dots: 2 * (2*8*16*16) * 12 trips
+    expect = 2 * 8 * 128 * 16 + 12 * 2 * (2 * 8 * 16 * 16)
+    assert counts.flops == expect
+    assert len(counts.loops) == 1
+    lp = counts.loops[0]
+    assert lp.trips == 12 and lp.has_exp and lp.n_dots == 2
+    assert lp.fusable
+
+
+def test_collective_accounting():
+    counts = analyze_hlo(HLO, assume_bf16=False)
+    # one all-reduce of f32[8,128] over groups of 4: 2*(n-1)/n * bytes
+    expect = 2 * 3 / 4 * (8 * 128 * 4)
+    assert counts.collective_bytes == pytest.approx(expect)
+    # bf16 fix halves it
+    counts2 = analyze_hlo(HLO, assume_bf16=True)
+    assert counts2.collective_bytes == pytest.approx(expect / 2)
+
+
+def test_kernel_adjustment_reduces_memory():
+    counts = analyze_hlo(HLO, assume_bf16=False)
+    assert counts.hbm_bytes_kernel_adjusted() < counts.hbm_bytes
+
+
+def test_roofline_terms_shape():
+    counts = analyze_hlo(HLO)
+    t = roofline_terms(counts)
+    assert set(t) == {"compute_s", "memory_s", "collective_s", "dominant",
+                      "bound_s", "roofline_fraction"}
+    assert 0 <= t["roofline_fraction"] <= 1.0
+
+
+def test_parse_computations():
+    comps = parse_hlo(HLO)
+    assert "main.1" in comps and "body.1" in comps
+    assert comps["body.1"].ops["dot.1"].kind == "dot"

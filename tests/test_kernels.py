@@ -1,0 +1,164 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs the pure-jnp
+ref.py oracle, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+RNG = jax.random.PRNGKey(7)
+
+
+# --- flash attention ----------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,Hkv,Sq,Skv,hd", [
+    (2, 4, 2, 128, 128, 64),
+    (1, 8, 1, 256, 256, 32),     # MQA
+    (2, 4, 4, 96, 96, 64),       # MHA, ragged seq (pad path)
+    (1, 6, 2, 64, 320, 128),     # cross-length
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, Hkv, Sq, Skv, hd, dtype):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    q = jax.random.normal(RNG, (B, H, Sq, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(RNG, 1), (B, Hkv, Skv, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(RNG, 2), (B, Hkv, Skv, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_attention_window(window):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    q = jax.random.normal(RNG, (1, 4, 128, 64), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(RNG, 1), (1, 2, 128, 64))
+    v = jax.random.normal(jax.random.fold_in(RNG, 2), (1, 2, 128, 64))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=32, block_k=32, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --- ssd scan -----------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,hd,N,chunk", [
+    (2, 256, 3, 32, 16, 64),
+    (1, 128, 2, 64, 128, 128),   # full-size state dims
+    (2, 100, 2, 32, 16, 64),     # pad path
+])
+def test_ssd_scan_sweep(B, S, H, hd, N, chunk):
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_sequential
+    x = jax.random.normal(RNG, (B, S, H, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(RNG, 1),
+                                           (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(RNG, 2), (H,)) * 0.3)
+    Bm = jax.random.normal(jax.random.fold_in(RNG, 3), (B, S, N))
+    Cm = jax.random.normal(jax.random.fold_in(RNG, 4), (B, S, N))
+    y = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    ys = ssd_sequential(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ys),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_kernel_matches_model_path():
+    """Kernel and the model's own chunked implementation agree (the
+    model path is what the dry-run lowers; the kernel is the TPU twin)."""
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_ref
+    B, S, H, hd, N = 2, 192, 4, 16, 32
+    x = jax.random.normal(RNG, (B, S, H, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(RNG, 5),
+                                           (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(RNG, 6), (H,)) * 0.3)
+    Bm = jax.random.normal(jax.random.fold_in(RNG, 7), (B, S, N))
+    Cm = jax.random.normal(jax.random.fold_in(RNG, 8), (B, S, N))
+    y = ssd_scan(x, dt, A, Bm, Cm, chunk=64, interpret=True)
+    yr = ssd_ref(x, dt, A, Bm, Cm, chunk=64)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --- rg-lru -------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,W,chunk,bw", [
+    (2, 128, 96, 32, 32),
+    (1, 64, 256, 64, 128),
+    (2, 100, 48, 32, 48),        # pad path
+])
+def test_rg_lru_sweep(B, S, W, chunk, bw):
+    from repro.kernels.rg_lru.ops import rg_lru_scan
+    from repro.kernels.rg_lru.ref import rg_lru_ref
+    x = jax.random.normal(RNG, (B, S, W), jnp.float32)
+    r = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(RNG, 1),
+                                         (B, S, W)))
+    i = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(RNG, 2),
+                                         (B, S, W)))
+    lam = jax.random.normal(jax.random.fold_in(RNG, 3), (W,))
+    h = rg_lru_scan(x, r, i, lam, chunk=chunk, block_w=bw, interpret=True)
+    hr = rg_lru_ref(x, r, i, lam)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --- ckpt codec ----------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1000, 333), (7,), (512, 256), (100000,)])
+def test_codec_quantize_matches_ref(shape):
+    from repro.kernels.ckpt_codec.ops import quantize, dequantize
+    from repro.kernels.ckpt_codec.ref import quantize_jnp, dequantize_jnp
+    x = jax.random.normal(RNG, shape, jnp.float32) * 3.0
+    q, s = quantize(x, interpret=True)
+    qr, sr = quantize_jnp(x)
+    assert bool(jnp.all(q == qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    xd = dequantize(q, s, interpret=True)
+    xr = dequantize_jnp(qr, sr)
+    np.testing.assert_allclose(np.asarray(xd), np.asarray(xr), rtol=1e-6)
+
+
+def test_codec_error_bound():
+    """Blockwise int8: per-element error <= scale/2 <= max|block|/254."""
+    from repro.kernels.ckpt_codec.ref import quantize_ref, dequantize_ref
+    x = np.random.RandomState(0).randn(4096).astype(np.float32)
+    q, s = quantize_ref(x)
+    xd = dequantize_ref(q, s)[:x.size]
+    bound = np.repeat(s, 256)[:x.size] * 0.5 + 1e-7
+    assert np.all(np.abs(xd - x) <= bound)
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,hd,causal,win", [
+    (1, 4, 2, 128, 32, True, 0),    # GQA
+    (2, 2, 1, 96, 64, True, 0),     # MQA, pad path
+    (1, 4, 4, 64, 32, True, 16),    # windowed
+    (1, 2, 2, 64, 32, False, 0),    # bidirectional
+])
+def test_flash_attention_backward(B, H, Hkv, S, hd, causal, win):
+    """custom_vjp over the Pallas fwd/bwd kernels vs jax.grad of the
+    naive oracle."""
+    from repro.kernels.flash_attention.ops import flash_attention_diff
+    from repro.kernels.flash_attention.ref import attention_ref
+    q = jax.random.normal(RNG, (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(RNG, 1), (B, Hkv, S, hd))
+    v = jax.random.normal(jax.random.fold_in(RNG, 2), (B, Hkv, S, hd))
+
+    def loss_k(q, k, v):
+        return jnp.sum(jnp.sin(flash_attention_diff(
+            q, k, v, causal, win, 32, 32, True)))
+
+    def loss_r(q, k, v):
+        return jnp.sum(jnp.sin(attention_ref(q, k, v, causal=causal,
+                                             window=win)))
+
+    gk = jax.grad(loss_k, (0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, (0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-4)

@@ -1,0 +1,144 @@
+"""Property-based tests (hypothesis) for the op-log and virtual ids —
+the paper's §III invariants."""
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LowerHalf, OpLog, VirtualId, HandleTable,
+                        StaleHandleError)
+from repro.core.oplog import (CacheAlloc, CacheFree, Compile, DataAdvance,
+                              ScheduleSet, DataReassign)
+
+
+# --- strategies: random op sequences ----------------------------------------
+
+@st.composite
+def op_sequences(draw):
+    """A plausible random runtime history."""
+    n = draw(st.integers(1, 40))
+    log = OpLog()
+    live_caches = []
+    arches = ["a1", "a2"]
+    for _ in range(n):
+        kind = draw(st.sampled_from(
+            ["advance", "compile", "alloc", "free", "sched", "reassign"]))
+        if kind == "advance":
+            log.append(DataAdvance, n=draw(st.integers(1, 5)))
+        elif kind == "compile":
+            log.append(Compile, vexec=VirtualId("exec", draw(st.integers(1, 5))),
+                       fn_name="f", arch=draw(st.sampled_from(arches)),
+                       shape_key=draw(st.sampled_from(["s1", "s2"])),
+                       plan_key="")
+        elif kind == "alloc":
+            vid = VirtualId("cache", 100 + len(log.ops))
+            live_caches.append(vid)
+            log.append(CacheAlloc, vcache=vid, arch="a1", batch=1, max_seq=8)
+        elif kind == "free" and live_caches:
+            log.append(CacheFree, vcache=live_caches.pop())
+        elif kind == "sched":
+            log.append(ScheduleSet, key=draw(st.sampled_from(["lr", "wd"])),
+                       value=draw(st.floats(0.1, 2.0, allow_nan=False)))
+        elif kind == "reassign":
+            log.append(DataReassign,
+                       assignment=((0, draw(st.integers(0, 3))),))
+    return log
+
+
+class FakeRuntime:
+    """Duck-typed LowerHalf recording observable state (no jax)."""
+
+    def __init__(self):
+        self.compiled = set()
+        self.caches = set()
+        self.cursor = 0
+        self.sched = {}
+        self.assignment = None
+
+    def apply_op(self, op):
+        if isinstance(op, Compile):
+            self.compiled.add((op.fn_name, op.arch, op.shape_key, op.plan_key))
+        elif isinstance(op, CacheAlloc):
+            self.caches.add(op.vcache)
+        elif isinstance(op, CacheFree):
+            self.caches.discard(op.vcache)
+        elif isinstance(op, DataAdvance):
+            self.cursor += op.n
+        elif isinstance(op, ScheduleSet):
+            self.sched[op.key] = op.value
+        elif isinstance(op, DataReassign):
+            self.assignment = op.assignment
+
+    def state(self):
+        return (frozenset(self.compiled), frozenset(self.caches),
+                self.cursor, tuple(sorted(self.sched.items())),
+                self.assignment)
+
+
+@given(op_sequences())
+@settings(max_examples=200, deadline=None)
+def test_prune_preserves_replay_semantics(log):
+    """replay(prune(log)) == replay(log) on observable state — the
+    record-prune-replay correctness invariant."""
+    a, b = FakeRuntime(), FakeRuntime()
+    log.replay(a)
+    log.prune().replay(b)
+    assert a.state() == b.state()
+
+
+@given(op_sequences())
+@settings(max_examples=100, deadline=None)
+def test_prune_never_grows(log):
+    assert len(log.prune()) <= len(log)
+
+
+@given(op_sequences())
+@settings(max_examples=100, deadline=None)
+def test_prune_idempotent(log):
+    once = log.prune()
+    twice = once.prune()
+    assert [type(o).__name__ for o in once.ops] == \
+        [type(o).__name__ for o in twice.ops]
+
+
+@given(op_sequences())
+@settings(max_examples=100, deadline=None)
+def test_json_roundtrip(log):
+    back = OpLog.from_json(log.to_json())
+    assert len(back) == len(log)
+    a, b = FakeRuntime(), FakeRuntime()
+    log.replay(a)
+    back.replay(b)
+    assert a.state() == b.state()
+
+
+# --- virtual id table --------------------------------------------------------
+
+def test_handle_table_generation_invalidates():
+    t = HandleTable()
+    vid = t.create("exec", "real1")
+    assert t.translate(vid) == "real1"
+    t.new_incarnation()
+    with pytest.raises(StaleHandleError):
+        t.translate(vid)
+    t.bind(vid, "real2")
+    assert t.translate(vid) == "real2"
+
+
+@given(st.lists(st.integers(0, 4), min_size=1, max_size=50))
+def test_handle_table_uids_unique(kinds):
+    t = HandleTable()
+    seen = set()
+    for k in kinds:
+        vid = t.create(f"k{k}", object())
+        assert vid not in seen
+        seen.add(vid)
+
+
+def test_adopted_vids_bump_counter():
+    """Binding a vid from a previous process must not cause collisions."""
+    t = HandleTable()
+    foreign = VirtualId("exec", 100)
+    t.bind(foreign, "x")
+    fresh = t.create("exec", "y")
+    assert fresh.uid > 100
