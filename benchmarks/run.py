@@ -4,6 +4,8 @@
   overhead        — Fig 3: interception overhead (glxgears 8%)
   oplog_bench     — §VI record-prune-replay: log size / replay cost
   ckpt_codec_bench— DESIGN §4.5: delta + int8 checkpoint payloads
+  async_snapshot  — step-time overhead of sync vs async (pipelined)
+                    snapshots; the <30%-of-sync acceptance gate
   roofline_table  — §Roofline: aggregated dry-run terms (reads
                     benchmarks/results/dryrun; run repro.launch.dryrun
                     first — missing cells simply produce no rows)
@@ -15,13 +17,15 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (ckpt_codec_bench, oplog_bench, overhead,
-                            restart_speed, roofline_table)
+    from benchmarks import (async_snapshot_bench, ckpt_codec_bench,
+                            oplog_bench, overhead, restart_speed,
+                            roofline_table)
     suites = {
         "restart_speed": restart_speed.run,
         "overhead": overhead.run,
         "oplog": oplog_bench.run,
         "ckpt_codec": ckpt_codec_bench.run,
+        "async_snapshot": async_snapshot_bench.run,
         "roofline": roofline_table.run,
     }
     want = sys.argv[1:] or list(suites)

@@ -20,8 +20,10 @@ def main() -> None:
     args = ap.parse_args()
 
     root = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ckpt_")
+    # delta_base_interval=4: full base snapshot every 4th checkpoint,
+    # XOR delta links between — restore walks the chain automatically
     mgr = CheckpointManager(LocalFSBackend(root), async_save=True,
-                            keep_last=3)
+                            keep_last=3, delta_base_interval=4)
     job = TrainJob(arch=args.arch, shape_key="train_s32_b4")
     tr = Trainer(job, (1, 1), ("data", "model"), manager=mgr)
     tr.init_state()
@@ -32,11 +34,14 @@ def main() -> None:
         print(f"step {m['step']:4.0f} loss {m['loss']:.4f} "
               f"lr {m['lr']:.2e} |g| {m['grad_norm']:.3f}")
         if (step + 1) % args.ckpt_every == 0:
-            tr.save(block=False)          # async background snapshot
+            tr.snapshot()  # non-blocking: encode+write overlap next steps
             print(f"  checkpoint @ step {int(tr.upper.get('step'))} "
                   f"(async)")
     mgr.wait()
-    print(f"done; checkpoints at steps {mgr.backend.list_steps()}")
+    s = mgr.stats
+    print(f"done; checkpoints at steps {mgr.backend.list_steps()} "
+          f"({s['bytes_written'] / 2**20:.1f} MiB written for "
+          f"{s['bytes_logical'] / 2**20:.1f} MiB logical)")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,10 @@ from repro.core.split_state import (
     fill_like, flatten_with_paths,
 )
 from repro.core.checkpoint import CheckpointManager, RestoredState
+from repro.core.async_snapshot import (
+    AsyncSnapshotter, SnapshotHandle,
+    materialize_manifest_chain, manifest_chain_steps,
+)
 from repro.core.restore import fresh_lower_half, materialize_entry
 from repro.core.backends import make_backend, LocalFSBackend, ShardedBackend
 from repro.core.failure import (

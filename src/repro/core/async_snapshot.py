@@ -1,0 +1,472 @@
+"""Asynchronous snapshot pipeline: overlap checkpointing with the step
+loop (paper §I's "periodic snapshots in the background", made real).
+
+A snapshot moves through three phases:
+
+  capture   (caller thread, blocking, fast) device arrays are copied into
+            a *staging slot* — preallocated, reusable host buffers — at a
+            step boundary. This is the only stall the train/serve loop
+            pays; everything the checkpoint needs (host bytes, structure,
+            pruned op-log, job metadata) is frozen here, so the caller may
+            mutate its state immediately after ``snapshot()`` returns.
+  encode    (single encode thread, ordered) each leaf runs through the
+            delta codec (core.delta / kernels.ckpt_codec): int8
+            quantization for error-tolerant kinds, XOR against the
+            previous snapshot's staging slot when delta chaining is on,
+            content-addressed chunking always.
+  commit    chunk blobs stream to the backend on a writer pool
+            (``put_blob`` fan-out, bounded in-flight bytes); once every
+            blob is durable the manifest is committed by the backend's
+            fsync+rename protocol. A checkpoint exists iff its manifest
+            does — a crash anywhere earlier leaves only invisible garbage
+            blobs, never a corrupt "latest".
+
+Double buffering: with chaining off, two slots (one encoding, one free to
+capture) give full overlap. With chaining on, the previous snapshot's
+slot stays pinned as the XOR base until its successor commits, so a third
+slot keeps capture overlapped. If every slot is pinned when ``snapshot()``
+is called, backpressure applies: ``"block"`` waits for the pipeline to
+drain a slot, ``"skip"`` drops the request (counted in ``stats``) — a
+snapshot cadence faster than the storage can absorb degrades to the
+storage's rate instead of queueing unboundedly.
+
+Delta chains: every ``delta_base_interval``-th snapshot is a full base;
+the ones between store XOR deltas whose manifest records ``base_step``.
+``materialize_manifest_chain`` walks base links back to the full base and
+re-applies deltas forward. GC keeps the transitive base closure of every
+retained manifest, so a kept checkpoint is always restorable.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.backends.base import CheckpointBackend
+from repro.core import delta as deltamod
+from repro.core.oplog import OpLog
+from repro.core.split_state import UpperHalf, flatten_with_paths
+
+MANIFEST_FORMAT = 2
+
+# bound on blob bytes queued to the writer pool per snapshot; keeps the
+# encode thread from racing ahead of a slow backend unboundedly
+MAX_PENDING_WRITES = 32
+
+
+class _StagingSlot:
+    """Reusable pinned host buffers for one in-flight snapshot."""
+
+    def __init__(self) -> None:
+        self.buffers: Dict[str, Dict[str, np.ndarray]] = {}
+        self.busy = False
+
+    def capture(self, upper: UpperHalf) -> Dict[str, Dict[str, np.ndarray]]:
+        """Copy-on-snapshot: device→host. On a real accelerator,
+        ``device_get`` already materializes a fresh private host buffer —
+        storing it directly avoids a second full memcpy on the only
+        stall the caller pays. Host-resident leaves (numpy arrays,
+        scalars — and everything on the CPU backend, where ``device_get``
+        may alias a donatable buffer) are copied into this slot's
+        preallocated pool instead."""
+        import jax
+        accel = jax.default_backend() != "cpu"
+        out: Dict[str, Dict[str, np.ndarray]] = {}
+        for name, e in upper.items():
+            pool = self.buffers.setdefault(name, {})
+            taken: Dict[str, np.ndarray] = {}
+            for path, v in flatten_with_paths(e.tree):
+                host = jax.device_get(v)
+                if accel and host is not v and not isinstance(v, np.ndarray):
+                    taken[path] = np.asarray(host)  # already a private copy
+                    continue
+                a = np.asarray(host)
+                buf = pool.get(path)
+                if buf is None or buf.shape != a.shape or buf.dtype != a.dtype:
+                    buf = np.empty(a.shape, a.dtype)
+                    pool[path] = buf
+                np.copyto(buf, a)
+                taken[path] = buf
+            out[name] = taken
+        return out
+
+
+@dataclass
+class _Captured:
+    """Everything frozen at the capture point."""
+    step: int
+    slot: _StagingSlot
+    host_state: Dict[str, Dict[str, np.ndarray]]
+    structure: Dict[str, Any]
+    kinds: Dict[str, str]
+    log_json: Any
+    job_meta: Dict[str, Any]
+    capture_seconds: float
+
+
+class SnapshotHandle:
+    """Caller's view of one snapshot moving through the pipeline."""
+
+    def __init__(self, step: int) -> None:
+        self.step = step
+        self._future: Future = Future()
+        self.timings: Dict[str, float] = {}
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def result(self, timeout: Optional[float] = None) -> Dict[str, Any]:
+        """Block until committed; returns the manifest."""
+        return self._future.result(timeout)
+
+    # Future-compatible alias so legacy callers treating save()'s return
+    # value as a concurrent.futures.Future keep working
+    def add_done_callback(self, fn) -> None:
+        self._future.add_done_callback(fn)
+
+
+class AsyncSnapshotter:
+    """The capture/encode/commit pipeline (see module docstring)."""
+
+    def __init__(
+        self,
+        backend: CheckpointBackend,
+        *,
+        codec_by_kind: Optional[Dict[str, str]] = None,
+        delta_base_interval: int = 1,
+        backpressure: str = "block",
+        writers: int = 4,
+        compress: bool = True,
+        keep_last: Optional[int] = None,
+        prune_oplog: bool = True,
+        depth: Optional[int] = None,
+    ) -> None:
+        assert backpressure in ("block", "skip"), backpressure
+        assert delta_base_interval >= 1
+        self.backend = backend
+        self.codec_by_kind = codec_by_kind or {}
+        self.delta_base_interval = delta_base_interval
+        self.backpressure = backpressure
+        self.compress = compress
+        self.keep_last = keep_last
+        self.prune_oplog = prune_oplog
+        if depth is None:  # +1 slot to keep capture overlapped while the
+            depth = 2 if delta_base_interval == 1 else 3  # base is pinned
+        self._slots = [_StagingSlot() for _ in range(depth)]
+        self._cond = threading.Condition()
+        self._encode_pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="snap-encode")  # ordered
+        self._writer_pool = ThreadPoolExecutor(
+            max_workers=writers, thread_name_prefix="snap-write")
+        self._inflight: List[SnapshotHandle] = []
+        self._last_error: Optional[BaseException] = None
+        # previous snapshot kept as the XOR base: (step, host_state, slot)
+        self._prev: Optional[Tuple[int, Dict[str, Dict[str, np.ndarray]],
+                                   _StagingSlot]] = None
+        self._chain_len = 0
+        self.stats: Dict[str, Any] = {
+            "saves": 0, "skipped": 0, "failed": 0, "chain_links": 0,
+            "bytes_written": 0, "bytes_logical": 0,
+            "save_seconds": 0.0, "capture_seconds": 0.0,
+            "encode_commit_seconds": 0.0,
+        }
+
+    # --- capture (caller thread) ------------------------------------------
+
+    def _acquire_slot(self, must_take: bool = False
+                      ) -> Optional[_StagingSlot]:
+        with self._cond:
+            while True:
+                for s in self._slots:
+                    if not s.busy:
+                        s.busy = True
+                        return s
+                if self.backpressure == "skip" and not must_take:
+                    return None
+                self._cond.wait()
+
+    def _release_slot(self, slot: _StagingSlot) -> None:
+        with self._cond:
+            slot.busy = False
+            self._cond.notify_all()
+
+    def snapshot(self, step: int, upper: UpperHalf, oplog: OpLog,
+                 job_meta: Optional[Dict[str, Any]] = None,
+                 must_take: bool = False) -> Optional[SnapshotHandle]:
+        """Capture now; encode + commit in the background. Returns None
+        iff the pipeline is saturated and backpressure policy is "skip".
+        ``must_take`` overrides a "skip" policy (a caller that asked to
+        block has said it will wait — dropping would lose e.g. the final
+        checkpoint of a run)."""
+        slot = self._acquire_slot(must_take=must_take)
+        if slot is None:
+            self.stats["skipped"] += 1
+            return None
+        t0 = time.monotonic()
+        try:
+            host_state = slot.capture(upper)
+            cap = _Captured(
+                step=step,
+                slot=slot,
+                host_state=host_state,
+                structure=upper.structure(),
+                kinds={name: e.kind for name, e in upper.items()},
+                log_json=(oplog.prune() if self.prune_oplog
+                          else oplog).to_json(),
+                job_meta=job_meta or {},
+                capture_seconds=time.monotonic() - t0,
+            )
+        except BaseException:
+            self._release_slot(slot)
+            raise
+        handle = SnapshotHandle(step)
+        handle.timings["capture"] = cap.capture_seconds
+        self.stats["capture_seconds"] += cap.capture_seconds
+        with self._cond:
+            self._inflight.append(handle)
+        self._encode_pool.submit(self._encode_and_commit, cap, handle)
+        return handle
+
+    # --- encode + commit (pipeline threads) -------------------------------
+
+    def _encode_and_commit(self, cap: _Captured,
+                           handle: SnapshotHandle) -> None:
+        t0 = time.monotonic()
+        try:
+            manifest = self._do_encode_commit(cap)
+        except BaseException as e:
+            with self._cond:
+                self._last_error = e   # drain() re-raises even if the
+                self.stats["failed"] += 1  # handle is retired by then
+            self._retire(cap.slot, handle, keep_as_prev=False)
+            handle._future.set_exception(e)
+            return
+        dt = time.monotonic() - t0
+        handle.timings["encode_commit"] = dt
+        self.stats["saves"] += 1
+        self.stats["encode_commit_seconds"] += dt
+        self.stats["save_seconds"] += cap.capture_seconds + dt
+        self._retire(cap.slot, handle,
+                     keep_as_prev=self.delta_base_interval > 1,
+                     step=cap.step, host_state=cap.host_state)
+        handle._future.set_result(manifest)
+
+    def _do_encode_commit(self, cap: _Captured) -> Dict[str, Any]:
+        chain = (self.delta_base_interval > 1 and self._prev is not None
+                 and self._chain_len < self.delta_base_interval - 1)
+        base_step = self._prev[0] if chain else None
+        base_state = self._prev[1] if chain else {}
+
+        writer = _BlobWriter(self.backend, self._writer_pool)
+        entries_manifest: Dict[str, Any] = {}
+        written = logical = 0
+        for name, leaves in cap.host_state.items():
+            codec = self.codec_by_kind.get(cap.kinds[name])
+            leaf_metas: Dict[str, Any] = {}
+            for path, arr in leaves.items():
+                prev_arr = None
+                if chain and not deltamod.codec_applicable(arr, codec):
+                    prev_arr = base_state.get(name, {}).get(path)
+                m = deltamod.encode_leaf(
+                    arr, writer.put, writer.has,
+                    codec=codec, prev=prev_arr, compress=self.compress)
+                written += m.pop("bytes_written", 0)
+                logical += arr.nbytes
+                leaf_metas[path] = m
+            entries_manifest[name] = {"kind": cap.kinds[name],
+                                      "leaves": leaf_metas}
+        writer.drain()  # every blob durable before the manifest commits
+        manifest = {
+            "format": MANIFEST_FORMAT,
+            "step": cap.step,
+            "base_step": base_step,
+            "entries": entries_manifest,
+            "oplog": cap.log_json,
+            "structure": cap.structure,
+            "job": cap.job_meta,
+        }
+        self.backend.commit_manifest(cap.step, manifest)
+        self._chain_len = self._chain_len + 1 if chain else 0
+        if chain:
+            self.stats["chain_links"] += 1
+        self.stats["bytes_written"] += written
+        self.stats["bytes_logical"] += logical
+        if self.keep_last is not None:
+            try:
+                self.gc(self.keep_last)
+            except Exception:  # noqa: BLE001 — snapshot IS committed;
+                # a transient retention failure must not report it lost
+                self.stats["gc_failures"] = \
+                    self.stats.get("gc_failures", 0) + 1
+        return manifest
+
+    def _retire(self, slot: _StagingSlot, handle: SnapshotHandle,
+                keep_as_prev: bool, step: int = -1,
+                host_state=None) -> None:
+        """Slot bookkeeping after a snapshot leaves the pipeline: the
+        committed slot becomes the next XOR base (when chaining); the
+        base it replaced is freed. The handle's result is set by the
+        caller right after — anyone blocked on it wakes with the slots
+        already released."""
+        with self._cond:
+            old_prev = self._prev
+            if keep_as_prev:
+                self._prev = (step, host_state, slot)
+            else:
+                self._prev = None
+                slot.busy = False
+            if old_prev is not None and old_prev[2] is not slot:
+                old_prev[2].busy = False
+            self._inflight = [h for h in self._inflight if h is not handle]
+            self._cond.notify_all()
+
+    # --- drain / shutdown --------------------------------------------------
+
+    def drain(self) -> None:
+        """Block until every in-flight snapshot committed (or failed),
+        then re-raise the most recent failure since the last drain —
+        including one that completed before drain was called, so
+        fire-and-forget callers (snapshot(); ...; wait()) cannot
+        silently lose checkpoints."""
+        with self._cond:
+            pending = list(self._inflight)
+        for h in pending:
+            try:
+                h.result()
+            except BaseException:  # noqa: BLE001 — raised via _last_error
+                pass
+        with self._cond:
+            err, self._last_error = self._last_error, None
+        if err is not None:
+            raise err
+
+    def consume_error(self, err: BaseException) -> None:
+        """A caller that already received `err` from a handle (blocking
+        save) takes ownership of it, so a later unrelated drain() does
+        not re-raise a failure that was handled and possibly retried."""
+        with self._cond:
+            if self._last_error is err:
+                self._last_error = None
+
+    def close(self) -> None:
+        try:
+            self.drain()
+        finally:
+            self._encode_pool.shutdown(wait=True)
+            self._writer_pool.shutdown(wait=True)
+
+    # --- gc ----------------------------------------------------------------
+
+    def gc(self, keep_last: int) -> None:
+        """Drop all but the last `keep_last` checkpoints — plus the
+        transitive base closure of the kept ones, so every survivor's
+        delta chain stays restorable — then GC unreferenced blobs."""
+        steps = self.backend.list_steps()
+        have = set(steps)
+        # keep_last <= 0 means "no retention limit", never "drop all"
+        keep = set(steps[-keep_last:]) if keep_last > 0 else set(steps)
+        frontier = list(keep)
+        manifests: Dict[int, Dict[str, Any]] = {}
+        while frontier:
+            s = frontier.pop()
+            m = manifests.get(s) or self.backend.get_manifest(s)
+            manifests[s] = m
+            b = m.get("base_step")
+            if b is not None and b in have and b not in keep:
+                keep.add(b)
+                frontier.append(b)
+        for s in steps:
+            if s not in keep:
+                self.backend.delete_step(s)
+        referenced: set = set()
+        for s in keep:
+            referenced |= deltamod.referenced_hashes(manifests[s])
+        self.backend.gc_blobs(referenced)
+
+
+class _BlobWriter:
+    """Fans blob writes out to the writer pool with a bounded in-flight
+    window; drain() rejoins before the manifest commit.
+
+    ``has`` answers "is this blob durable or already queued by me" —
+    the backend alone can't, because a queued write hasn't landed yet,
+    and asking it directly would re-write (and re-count) every repeated
+    chunk within one snapshot (e.g. zero-initialized weights)."""
+
+    def __init__(self, backend: CheckpointBackend,
+                 pool: ThreadPoolExecutor,
+                 max_pending: int = MAX_PENDING_WRITES) -> None:
+        self._backend = backend
+        self._pool = pool
+        self._sem = threading.Semaphore(max_pending)
+        self._futures: List[Future] = []
+        self._queued: set = set()  # touched only by the encode thread
+
+    def has(self, name: str) -> bool:
+        return name in self._queued or self._backend.has_blob(name)
+
+    def put(self, name: str, data: bytes) -> None:
+        self._queued.add(name)
+        self._sem.acquire()
+        self._futures.append(self._pool.submit(self._write, name, data))
+
+    def _write(self, name: str, data: bytes) -> None:
+        try:
+            self._backend.put_blob(name, data)
+        finally:
+            self._sem.release()
+
+    def drain(self) -> None:
+        for f in self._futures:
+            f.result()
+        self._futures.clear()
+
+
+# ---------------------------------------------------------------------------
+# restore side: delta chain -> full state
+# ---------------------------------------------------------------------------
+
+def manifest_chain_steps(backend: CheckpointBackend, step: int) -> List[int]:
+    """base-first list of steps whose manifests `step` depends on."""
+    chain = []
+    s: Optional[int] = step
+    while s is not None:
+        m = backend.get_manifest(s)
+        chain.append(s)
+        s = m.get("base_step")
+    chain.reverse()
+    return chain
+
+
+def materialize_manifest_chain(
+    backend: CheckpointBackend, step: int,
+) -> Tuple[Dict[str, Any], Dict[str, Dict[str, np.ndarray]]]:
+    """Delta chain -> full state. For each leaf of the target manifest,
+    walk base links back only as far as its run of xor modes reaches (a
+    full or codec leaf needs no predecessor), then decode forward,
+    XOR-applying each link. Leaves that exist only in intermediate
+    manifests — or are non-xor there — are never decoded, so restore
+    cost per leaf is O(xor-run length), not O(chain length)."""
+    manifests = [backend.get_manifest(s)
+                 for s in manifest_chain_steps(backend, step)]
+    final = manifests[-1]
+    entries: Dict[str, Dict[str, np.ndarray]] = {}
+    for name, e in final["entries"].items():
+        leaves: Dict[str, np.ndarray] = {}
+        for path in e["leaves"]:
+            i = len(manifests) - 1
+            while i > 0 and (manifests[i]["entries"][name]["leaves"][path]
+                             .get("mode") == "xor"):
+                i -= 1  # xor decodes against the predecessor's value
+            val: Optional[np.ndarray] = None
+            for m in manifests[i:]:
+                val = deltamod.decode_leaf(
+                    m["entries"][name]["leaves"][path],
+                    backend.get_blob, prev=val)
+            leaves[path] = val
+        entries[name] = leaves
+    return final, entries

@@ -1,26 +1,28 @@
 """LocalFSBackend — the CRIU-analogue.
 
 One image directory; blobs under blobs/ (content-addressed, shared across
-steps, which is what makes delta checkpoints cheap); manifests committed
-by atomic rename — the equivalent of CRIU's complete-image-or-nothing
-semantics.
+steps, which is what makes delta checkpoints cheap); blobs and manifests
+both follow the temp-write + fsync + atomic-rename commit protocol of
+``backends.base`` — the equivalent of CRIU's complete-image-or-nothing
+semantics. Stale ``.tmp`` files from a crashed writer are swept on open.
 """
 from __future__ import annotations
 
 import json
-import os
-import tempfile
 from pathlib import Path
 from typing import Any, Dict, List
 
-from repro.core.backends.base import CheckpointBackend
+from repro.core.backends.base import (CheckpointBackend, clean_tmp_under,
+                                      write_atomic)
 
 
 class LocalFSBackend(CheckpointBackend):
-    def __init__(self, root: str) -> None:
+    def __init__(self, root: str, *, fsync: bool = True) -> None:
         self.root = Path(root)
+        self.fsync = fsync
         (self.root / "blobs").mkdir(parents=True, exist_ok=True)
         (self.root / "manifests").mkdir(parents=True, exist_ok=True)
+        self.clean_tmp()
 
     # --- blobs ---------------------------------------------------------
 
@@ -33,15 +35,7 @@ class LocalFSBackend(CheckpointBackend):
         if p.exists():
             return  # content-addressed: identical by construction
         p.parent.mkdir(parents=True, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=p.parent, prefix=".tmp")
-        try:
-            with os.fdopen(fd, "wb") as f:
-                f.write(data)
-            os.rename(tmp, p)
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
+        write_atomic(p, data, self.fsync)
 
     def get_blob(self, name: str) -> bytes:
         return self._blob_path(name).read_bytes()
@@ -55,13 +49,8 @@ class LocalFSBackend(CheckpointBackend):
         return self.root / "manifests" / f"step_{step:012d}.json"
 
     def commit_manifest(self, step: int, manifest: Dict[str, Any]) -> None:
-        p = self._manifest_path(step)
-        fd, tmp = tempfile.mkstemp(dir=p.parent, prefix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        os.rename(tmp, p)  # atomic publish
+        write_atomic(self._manifest_path(step),
+                     json.dumps(manifest).encode(), self.fsync)
 
     def get_manifest(self, step: int) -> Dict[str, Any]:
         return json.loads(self._manifest_path(step).read_text())
@@ -71,6 +60,9 @@ class LocalFSBackend(CheckpointBackend):
         for p in (self.root / "manifests").glob("step_*.json"):
             out.append(int(p.stem.split("_")[1]))
         return sorted(out)
+
+    def clean_tmp(self, max_age_seconds: float = 3600.0) -> int:
+        return clean_tmp_under(self.root, max_age_seconds)
 
     def delete_step(self, step: int) -> None:
         p = self._manifest_path(step)

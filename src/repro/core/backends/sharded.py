@@ -12,13 +12,12 @@ injection).
 from __future__ import annotations
 
 import json
-import os
-import tempfile
 from concurrent.futures import ThreadPoolExecutor, wait
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
-from repro.core.backends.base import CheckpointBackend
+from repro.core.backends.base import (CheckpointBackend, clean_tmp_under,
+                                      write_atomic)
 
 
 def _host_of(name: str, n_hosts: int) -> int:
@@ -31,15 +30,17 @@ def _host_of(name: str, n_hosts: int) -> int:
 
 class ShardedBackend(CheckpointBackend):
     def __init__(self, root: str, n_hosts: int = 4, replicate: bool = False,
-                 writers: int = 4) -> None:
+                 writers: int = 4, *, fsync: bool = True) -> None:
         self.root = Path(root)
         self.n_hosts = n_hosts
         self.replicate = replicate
+        self.fsync = fsync
         self._pool = ThreadPoolExecutor(max_workers=writers)
         self._failed_hosts: set = set()  # failure injection for tests
         for h in range(n_hosts):
             (self.root / f"host_{h:03d}").mkdir(parents=True, exist_ok=True)
         (self.root / "coordinator").mkdir(parents=True, exist_ok=True)
+        self.clean_tmp()
 
     # --- failure injection ----------------------------------------------
 
@@ -62,15 +63,7 @@ class ShardedBackend(CheckpointBackend):
     def _write(self, path: Path, data: bytes) -> None:
         if path.exists():
             return
-        fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=".tmp")
-        try:
-            with os.fdopen(fd, "wb") as f:
-                f.write(data)
-            os.rename(tmp, path)
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
+        write_atomic(path, data, self.fsync)
 
     def put_blob(self, name: str, data: bytes) -> None:
         futures = [self._pool.submit(self._write, p, data)
@@ -106,13 +99,11 @@ class ShardedBackend(CheckpointBackend):
         return self.root / "coordinator" / f"step_{step:012d}.json"
 
     def commit_manifest(self, step: int, manifest: Dict[str, Any]) -> None:
-        p = self._manifest_path(step)
-        fd, tmp = tempfile.mkstemp(dir=p.parent, prefix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        os.rename(tmp, p)
+        write_atomic(self._manifest_path(step),
+                     json.dumps(manifest).encode(), self.fsync)
+
+    def clean_tmp(self, max_age_seconds: float = 3600.0) -> int:
+        return clean_tmp_under(self.root, max_age_seconds)
 
     def get_manifest(self, step: int) -> Dict[str, Any]:
         return json.loads(self._manifest_path(step).read_text())

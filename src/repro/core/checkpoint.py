@@ -1,32 +1,33 @@
-"""CheckpointManager: periodic, asynchronous, atomic snapshots of the
-upper half (paper §I: "taking periodic snapshots of the editor program in
-the background").
+"""CheckpointManager: the phased (capture / encode / commit) snapshot
+API over the async pipeline in ``core.async_snapshot``.
 
-Save path:
-  1. (caller thread, blocking, fast) pull upper-half tensors to host —
-     the only step that must pause the step loop;
-  2. (background thread) codec + chunk + content-addressed blob writes
-     (delta vs whatever already exists) through the backend;
-  3. atomic manifest commit — a checkpoint exists iff its manifest does.
+``save`` is capture-then-return: the caller thread pays only the
+device→staging copy; delta encoding (``core.delta`` +
+``kernels.ckpt_codec``) and backend writes overlap subsequent train or
+serve steps on the pipeline's encode thread + writer pool. A checkpoint
+exists iff its manifest committed (fsync+rename in the backend), so a
+crash mid-write never corrupts the latest checkpoint.
 
-The manifest bundles the PRUNED op-log (record-prune-replay) and the
-upper-half structure (leaf paths, dtypes, logical sharding axes), which is
-everything restore needs on any topology.
+Manifests are format 2: they may record a ``base_step``, forming a delta
+chain of XOR links back to a full base snapshot
+(``delta_base_interval``). ``restore`` materializes the chain — full base
+decoded first, each delta link XOR-applied forward — and returns host
+state plus the PRUNED op-log (record-prune-replay) and upper-half
+structure, which is everything restore needs on any topology.
+
+Synchronous behavior (``async_save=False`` or ``save(block=True)``) runs
+the same pipeline and joins it before returning.
 """
 from __future__ import annotations
 
-import json
-import threading
-import time
-from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
 import numpy as np
 
+from repro.core.async_snapshot import (AsyncSnapshotter, SnapshotHandle,
+                                       materialize_manifest_chain)
 from repro.core.backends.base import CheckpointBackend
-from repro.core.delta import (serialize_tensor, deserialize_tensor,
-                              referenced_hashes)
 from repro.core.oplog import OpLog
 from repro.core.split_state import UpperHalf
 
@@ -49,75 +50,74 @@ class CheckpointManager:
         async_save: bool = True,
         keep_last: Optional[int] = None,
         prune_oplog: bool = True,
+        delta_base_interval: int = 1,
+        backpressure: str = "block",
+        writers: int = 4,
+        compress: bool = True,
     ) -> None:
         self.backend = backend
         # e.g. {"opt_state": "int8"} — moments tolerate quantization
         self.codec_by_kind = codec_by_kind or {}
         self.async_save = async_save
         self.keep_last = keep_last
-        self.prune_oplog = prune_oplog
-        self._pool = ThreadPoolExecutor(max_workers=1)  # ordered commits
-        self._pending: Optional[Future] = None
-        self.stats: Dict[str, Any] = {"saves": 0, "bytes_written": 0,
-                                      "bytes_logical": 0, "save_seconds": 0.0}
+        self.pipeline = AsyncSnapshotter(
+            backend,
+            codec_by_kind=codec_by_kind,
+            delta_base_interval=delta_base_interval,
+            backpressure=backpressure,
+            writers=writers,
+            compress=compress,
+            keep_last=keep_last,
+            prune_oplog=prune_oplog,
+        )
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return self.pipeline.stats
 
     # --- save -------------------------------------------------------------
 
     def save(self, step: int, upper: UpperHalf, oplog: OpLog,
              block: bool = False,
-             job_meta: Optional[Dict[str, Any]] = None) -> Optional[Future]:
-        t0 = time.monotonic()
-        host_state = upper.to_host()          # snapshot point (blocking)
-        structure = upper.structure()
-        kinds = {name: e.kind for name, e in upper.items()}
-        log = oplog.prune() if self.prune_oplog else oplog
-        log_json = log.to_json()
-        snapshot_s = time.monotonic() - t0
+             job_meta: Optional[Dict[str, Any]] = None,
+             ) -> Optional[SnapshotHandle]:
+        """Phase 1 (capture) on this thread; phases 2-3 in the pipeline.
 
-        def _write() -> int:
-            t1 = time.monotonic()
-            entries_manifest: Dict[str, Any] = {}
-            written = logical = 0
-            for name, leaves in host_state.items():
-                codec = self.codec_by_kind.get(kinds[name])
-                leaf_metas = {}
-                for path, arr in leaves.items():
-                    m = serialize_tensor(
-                        arr, self.backend.put_blob, self.backend.has_blob,
-                        codec=codec)
-                    written += m.pop("bytes_written", 0)
-                    logical += arr.nbytes
-                    leaf_metas[path] = m
-                entries_manifest[name] = {"kind": kinds[name],
-                                          "leaves": leaf_metas}
-            manifest = {
-                "step": step,
-                "entries": entries_manifest,
-                "oplog": log_json,
-                "structure": structure,
-                "job": job_meta or {},
-                "format": 1,
-            }
-            self.backend.commit_manifest(step, manifest)
-            self.stats["saves"] += 1
-            self.stats["bytes_written"] += written
-            self.stats["bytes_logical"] += logical
-            self.stats["save_seconds"] += snapshot_s + (time.monotonic() - t1)
-            if self.keep_last is not None:
-                self._gc(self.keep_last)
-            return written
-
-        if self.async_save and not block:
-            self.wait()                        # keep at most one in flight
-            self._pending = self._pool.submit(_write)
-            return self._pending
-        _write()
-        return None
+        Returns a SnapshotHandle to the in-flight snapshot, or None when
+        it completed synchronously — or was dropped by a "skip"
+        backpressure policy (distinguish via ``stats['skipped']``). A
+        blocking save is never dropped: asking to block is asking to
+        wait for a slot."""
+        blocking = block or not self.async_save
+        handle = self.pipeline.snapshot(step, upper, oplog,
+                                        job_meta=job_meta,
+                                        must_take=blocking)
+        if handle is None:
+            return None
+        if blocking:
+            try:
+                handle.result()
+            except BaseException as e:
+                self.pipeline.consume_error(e)  # delivered here, not to
+                raise                           # a later wait()
+            return None
+        return handle
 
     def wait(self) -> None:
-        if self._pending is not None:
-            self._pending.result()
-            self._pending = None
+        """Join the pipeline; re-raises the latest failed snapshot."""
+        self.pipeline.drain()
+
+    def close(self) -> None:
+        """Drain and shut down the pipeline's threads. Long-lived
+        processes creating managers per job should close them (or use
+        the manager as a context manager)."""
+        self.pipeline.close()
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # --- restore ------------------------------------------------------------
 
@@ -127,25 +127,11 @@ class CheckpointManager:
             step = self.backend.latest_step()
             if step is None:
                 raise FileNotFoundError("no committed checkpoints")
-        manifest = self.backend.get_manifest(step)
-        entries: Dict[str, Dict[str, np.ndarray]] = {}
-        for name, e in manifest["entries"].items():
-            entries[name] = {
-                path: deserialize_tensor(meta, self.backend.get_blob)
-                for path, meta in e["leaves"].items()
-            }
+        manifest, entries = materialize_manifest_chain(self.backend, step)
         oplog = OpLog.from_json(manifest["oplog"])
         return RestoredState(step=step, manifest=manifest, entries=entries,
                              oplog=oplog)
 
-    # --- gc -------------------------------------------------------------------
-
-    def _gc(self, keep_last: int) -> None:
-        steps = self.backend.list_steps()
-        drop = steps[:-keep_last] if keep_last > 0 else []
-        for s in drop:
-            self.backend.delete_step(s)
-        referenced = set()
-        for s in self.backend.list_steps():
-            referenced |= referenced_hashes(self.backend.get_manifest(s))
-        self.backend.gc_blobs(referenced)
+    # retention GC lives in the pipeline (AsyncSnapshotter.gc) and runs
+    # on the encode thread after each commit when keep_last is set — do
+    # not call it from other threads, it races in-flight encodes

@@ -1,20 +1,42 @@
-"""Incremental (delta) checkpoints via content-addressed chunking —
-the record-prune-replay idea (paper §VI) applied to snapshot payloads.
+"""Delta codec: chunked, content-addressed, optionally chained snapshot
+payloads (the record-prune-replay idea of paper §VI applied to bytes).
 
-Every tensor is split into fixed-size chunks; each chunk is stored under
-its blake2b hash. Unchanged data (frozen embeddings, stale optimizer
-slots, the previous step's identical tensors when checkpointing more often
-than updating) re-uses existing blobs for free, so the marginal cost of a
-checkpoint is proportional to what actually changed.
+Three leaf encodings, chosen per tensor by the snapshot pipeline:
 
-Optional codec: int8 block quantization (see kernels/ckpt_codec) for
-error-tolerant entries (optimizer moments), cutting bytes ~4x. The codec
-is applied before chunking; its metadata travels in the leaf manifest.
+``full``   raw bytes, split into fixed-size chunks, each stored under its
+           blake2b hash. Unchanged data (frozen embeddings, stale
+           optimizer slots) re-uses existing blobs for free.
+``codec``  lossy int8 block quantization (kernels/ckpt_codec — Pallas on
+           TPU, numpy ref on host) applied before chunking; used for
+           error-tolerant entries (optimizer moments), ~4x smaller.
+``xor``    byte-level XOR against the *previous snapshot's* copy of the
+           same leaf (through the ckpt_codec Pallas kernel when an
+           accelerator is attached, numpy on host), forming a delta
+           chain back to a full base snapshot.
+           All-zero chunks (unchanged regions) are elided entirely, and
+           non-zero chunks are zlib-compressed when that shrinks them, so
+           the marginal cost of a snapshot is proportional to the entropy
+           of what actually changed.
+
+The encode API is *streaming*: ``encode_leaf`` walks a tensor one chunk
+at a time (no whole-tensor XOR materialization) and hands each chunk to a
+``put_blob`` callable, which the async snapshot pipeline backs with a
+writer thread pool. ``decode_leaf`` inverts one link; chain walking lives
+in ``core.async_snapshot.materialize_manifest_chain``.
+
+Manifest leaf format (format 2) — format-1 metas (no "mode" key) are
+still decoded for old checkpoints:
+
+    {"shape": [...], "dtype": "f32", "mode": "full|codec|xor",
+     "codec": "int8"|None,
+     "parts": {part: {"dtype", "shape", "chunks": [hash|None, ...],
+                      "enc": ["raw"|"zlib", ...]}}}
 """
 from __future__ import annotations
 
 import hashlib
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import zlib
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -26,6 +48,13 @@ except Exception:  # pragma: no cover
     _BF16 = None
 
 CHUNK_BYTES = 4 * 1024 * 1024
+
+# chunk-level storage encodings
+ENC_RAW = "raw"
+ENC_ZLIB = "zlib"
+# zlib level 1: ~GB/s on mostly-zero XOR streams, which is the case that
+# matters; random float chunks fail the "did it shrink" test and stay raw
+_ZLIB_LEVEL = 1
 
 
 def _hash(data: bytes) -> str:
@@ -41,7 +70,7 @@ def _np_dtype(name: str) -> np.dtype:
 
 
 # ---------------------------------------------------------------------------
-# codecs
+# codecs (lossy, pre-chunking)
 # ---------------------------------------------------------------------------
 
 def _int8_encode(arr: np.ndarray) -> Dict[str, np.ndarray]:
@@ -62,8 +91,210 @@ CODECS: Dict[str, Tuple[Callable, Callable]] = {
 }
 
 
+def codec_applicable(arr: np.ndarray, codec: Optional[str]) -> bool:
+    return (codec is not None and arr.dtype.kind == "f" and arr.size >= 256)
+
+
 # ---------------------------------------------------------------------------
-# tensor <-> chunked blobs
+# streaming chunk encode/decode
+# ---------------------------------------------------------------------------
+
+def iter_chunk_views(arr: np.ndarray) -> Iterator[memoryview]:
+    """Yield CHUNK_BYTES-sized byte views of a tensor without copying the
+    whole thing (one contiguous materialization at most)."""
+    flat = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+    n = flat.nbytes
+    if n == 0:
+        yield memoryview(b"")
+        return
+    mv = memoryview(flat)
+    for off in range(0, n, CHUNK_BYTES):
+        yield mv[off:off + CHUNK_BYTES]
+
+
+_PROBE_BYTES = 64 * 1024
+
+
+def _store_chunk(chunk: bytes, put_blob, has_blob,
+                 compress: bool) -> Tuple[str, str, int]:
+    """Store one chunk; returns (hash, enc, bytes_written)."""
+    enc = ENC_RAW
+    if compress and len(chunk) > 0:
+        # probe a prefix first: full-chunk zlib on incompressible float
+        # noise costs real encode-thread CPU for nothing, and snapshot
+        # payloads are bimodal (sparse XOR deltas ~ all compressible,
+        # fresh random weights ~ not at all)
+        probe = chunk[:_PROBE_BYTES]
+        if len(zlib.compress(probe, _ZLIB_LEVEL)) < len(probe) * 9 // 10:
+            packed = zlib.compress(chunk, _ZLIB_LEVEL)
+            if len(packed) < len(chunk) * 9 // 10:
+                chunk, enc = packed, ENC_ZLIB
+    h = _hash(chunk)
+    if has_blob(h):
+        return h, enc, 0
+    put_blob(h, chunk)
+    return h, enc, len(chunk)
+
+
+def _load_chunk(entry: Optional[str], enc: str, length: int,
+                get_blob) -> bytes:
+    if entry is None:  # elided all-zero chunk
+        return bytes(length)
+    data = get_blob(entry)
+    if enc == ENC_ZLIB:
+        data = zlib.decompress(data)
+    return data
+
+
+_DEVICE_XOR_MIN_BYTES = 1 << 20
+_device_xor: Optional[bool] = None
+
+
+def _use_device_xor() -> bool:
+    """XOR through the Pallas kernel when an accelerator is attached
+    (kernels/ckpt_codec); the host path stays pure numpy so the encode
+    thread never initializes jax on CPU-only deployments."""
+    global _device_xor
+    if _device_xor is None:
+        try:
+            import jax
+            _device_xor = jax.default_backend() == "tpu"
+        except Exception:  # pragma: no cover
+            _device_xor = False
+    return _device_xor
+
+
+def _xor_chunk(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    if _use_device_xor() and a.nbytes >= _DEVICE_XOR_MIN_BYTES:
+        from repro.kernels.ckpt_codec import ops
+        return ops.delta_encode(a, b)
+    return np.bitwise_xor(a, b)
+
+
+def _encode_part(p: np.ndarray, put_blob, has_blob, *,
+                 prev: Optional[np.ndarray] = None,
+                 compress: bool = True) -> Tuple[Dict[str, Any], int]:
+    """Chunk one part array; XOR against `prev` chunk-by-chunk when given
+    (streaming — never materializes the full delta)."""
+    chunks: List[Optional[str]] = []
+    encs: List[str] = []
+    written = 0
+    prev_iter = iter_chunk_views(p if prev is None else prev)
+    for view in iter_chunk_views(p):
+        if prev is not None:
+            pview = next(prev_iter)
+            delta = _xor_chunk(np.frombuffer(view, np.uint8),
+                               np.frombuffer(pview, np.uint8))
+            if not delta.any():
+                chunks.append(None)   # unchanged region: costs nothing
+                encs.append(ENC_RAW)
+                continue
+            data = delta.tobytes()
+        else:
+            data = view.tobytes()
+        h, enc, w = _store_chunk(data, put_blob, has_blob, compress)
+        chunks.append(h)
+        encs.append(enc)
+        written += w
+    meta = {"dtype": str(p.dtype), "shape": list(p.shape),
+            "chunks": chunks, "enc": encs}
+    return meta, written
+
+
+def _decode_part(pmeta: Dict[str, Any], get_blob,
+                 prev: Optional[np.ndarray] = None) -> np.ndarray:
+    dt = _np_dtype(pmeta["dtype"])
+    shape = pmeta["shape"]
+    total = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+    encs = pmeta.get("enc") or [ENC_RAW] * len(pmeta["chunks"])
+    out = np.empty(total, np.uint8)
+    off = 0
+    for entry, enc in zip(pmeta["chunks"], encs):
+        length = min(CHUNK_BYTES, total - off) if total else 0
+        data = _load_chunk(entry, enc, length, get_blob)
+        buf = np.frombuffer(data, np.uint8)
+        out[off:off + len(buf)] = buf
+        off += len(buf)
+    if prev is not None:
+        pb = np.ascontiguousarray(prev).reshape(-1).view(np.uint8)
+        np.bitwise_xor(out, pb, out=out)
+    return out.view(dt).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# leaf encode/decode (one tensor, one chain link)
+# ---------------------------------------------------------------------------
+
+def encode_leaf(
+    arr: np.ndarray,
+    put_blob: Callable[[str, bytes], None],
+    has_blob: Callable[[str], bool],
+    *,
+    codec: Optional[str] = None,
+    prev: Optional[np.ndarray] = None,
+    compress: bool = True,
+) -> Dict[str, Any]:
+    """Encode one tensor into blobs + leaf manifest.
+
+    ``prev`` (same shape/dtype tensor from the previous snapshot) selects
+    xor mode; ``codec`` selects the lossy codec (mutually exclusive with
+    xor — quantized entries rely on chunk dedup instead, so requantization
+    noise never accumulates along a chain)."""
+    arr = np.asarray(arr)
+    meta: Dict[str, Any] = {
+        "shape": list(arr.shape),
+        "dtype": str(arr.dtype),
+        "codec": None,
+        "parts": {},
+    }
+    written = 0
+    if codec_applicable(arr, codec):
+        meta["mode"] = "codec"
+        meta["codec"] = codec
+        for pname, p in CODECS[codec][0](arr).items():
+            pmeta, w = _encode_part(p, put_blob, has_blob, compress=compress)
+            meta["parts"][pname] = pmeta
+            written += w
+    elif (prev is not None and prev.shape == arr.shape
+          and prev.dtype == arr.dtype):
+        meta["mode"] = "xor"
+        pmeta, w = _encode_part(arr, put_blob, has_blob, prev=prev,
+                                compress=compress)
+        meta["parts"]["raw"] = pmeta
+        written += w
+    else:
+        meta["mode"] = "full"
+        pmeta, w = _encode_part(arr, put_blob, has_blob, compress=compress)
+        meta["parts"]["raw"] = pmeta
+        written += w
+    meta["bytes_written"] = written
+    return meta
+
+
+def decode_leaf(meta: Dict[str, Any],
+                get_blob: Callable[[str], bytes],
+                prev: Optional[np.ndarray] = None) -> np.ndarray:
+    """Decode one leaf. xor-mode leaves need ``prev`` — the decoded value
+    of the same leaf at the manifest's base step."""
+    dtype = _np_dtype(meta["dtype"])
+    shape = tuple(meta["shape"])
+    mode = meta.get("mode")
+    if mode is None:  # format-1 manifest
+        mode = "codec" if meta.get("codec") else "full"
+    if mode == "xor":
+        if prev is None:
+            raise ValueError("xor leaf needs its base-step value")
+        return _decode_part(meta["parts"]["raw"], get_blob,
+                            prev=prev).reshape(shape)
+    parts = {pname: _decode_part(pmeta, get_blob)
+             for pname, pmeta in meta["parts"].items()}
+    if mode == "codec":
+        return CODECS[meta["codec"]][1](parts, dtype, shape)
+    return np.asarray(parts["raw"], dtype).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# format-1 compatibility shims (whole-tree, no chaining)
 # ---------------------------------------------------------------------------
 
 def serialize_tensor(
@@ -72,51 +303,16 @@ def serialize_tensor(
     has_blob: Callable[[str], bool],
     codec: Optional[str] = None,
 ) -> Dict[str, Any]:
-    """Chunk + store a tensor; returns its leaf manifest. Blobs whose hash
-    already exists are skipped (the delta)."""
-    arr = np.asarray(arr)
-    meta: Dict[str, Any] = {
-        "shape": list(arr.shape),
-        "dtype": str(arr.dtype),
-        "codec": codec,
-        "parts": {},
-    }
-    parts: Dict[str, np.ndarray] = {"raw": arr}
-    if codec is not None and arr.dtype.kind == "f" and arr.size >= 256:
-        parts = CODECS[codec][0](arr)
-    else:
-        meta["codec"] = None
-
-    written = 0
-    for pname, p in parts.items():
-        data = np.ascontiguousarray(p).tobytes()
-        hashes: List[str] = []
-        for off in range(0, max(len(data), 1), CHUNK_BYTES):
-            chunk = data[off:off + CHUNK_BYTES]
-            h = _hash(chunk)
-            hashes.append(h)
-            if not has_blob(h):
-                put_blob(h, chunk)
-                written += len(chunk)
-        meta["parts"][pname] = {
-            "dtype": str(p.dtype), "shape": list(p.shape), "chunks": hashes}
-    meta["bytes_written"] = written
-    return meta
+    """Chunk + store a tensor (full/codec only). Kept for callers that
+    predate the chained API; equivalent to ``encode_leaf`` without
+    ``prev``."""
+    return encode_leaf(arr, put_blob, has_blob, codec=codec)
 
 
 def deserialize_tensor(meta: Dict[str, Any],
-                       get_blob: Callable[[str], bytes]) -> np.ndarray:
-    parts: Dict[str, np.ndarray] = {}
-    for pname, pmeta in meta["parts"].items():
-        data = b"".join(get_blob(h) for h in pmeta["chunks"])
-        dt = _np_dtype(pmeta["dtype"])
-        flat = np.frombuffer(data, dtype=dt)
-        parts[pname] = flat.reshape(pmeta["shape"])
-    dtype = _np_dtype(meta["dtype"])
-    shape = tuple(meta["shape"])
-    if meta.get("codec"):
-        return CODECS[meta["codec"]][1](parts, dtype, shape)
-    return np.asarray(parts["raw"], dtype).reshape(shape)
+                       get_blob: Callable[[str], bytes],
+                       prev: Optional[np.ndarray] = None) -> np.ndarray:
+    return decode_leaf(meta, get_blob, prev=prev)
 
 
 def referenced_hashes(manifest: Dict[str, Any]) -> set:
@@ -124,5 +320,5 @@ def referenced_hashes(manifest: Dict[str, Any]) -> set:
     for entry in manifest.get("entries", {}).values():
         for leaf in entry["leaves"].values():
             for pmeta in leaf["parts"].values():
-                out.update(pmeta["chunks"])
+                out.update(h for h in pmeta["chunks"] if h is not None)
     return out

@@ -2,6 +2,11 @@
 upper-half rebinding, with elastic resharding.
 
 Sequence (mirrors the paper's restart exactly):
+  0. materialize the payload: ``CheckpointManager.restore`` walks the
+     format-2 manifest's ``base_step`` delta chain back to its full base
+     snapshot, decodes the base, and XOR-applies each delta link forward
+     (core.async_snapshot.materialize_manifest_chain) — the caller sees
+     plain host arrays regardless of how the snapshot was encoded.
   1. construct a fresh LowerHalf — the 'load a fresh copy of OpenGL'
      moment. An elastic restore passes a mesh_factory for the *new*
      topology; the logged MeshCreate then binds the replacement mesh to
@@ -15,7 +20,7 @@ Sequence (mirrors the paper's restart exactly):
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -24,6 +29,23 @@ from repro.core.checkpoint import CheckpointManager, RestoredState
 from repro.core.split_state import LowerHalf, UpperHalf, fill_like, flatten_with_paths
 from repro.parallel.sharding import ParallelPlan, spec_for_axes
 from jax.sharding import NamedSharding, PartitionSpec
+
+
+def restorable_steps(backend) -> List[int]:
+    """Committed steps whose full delta chain is still present — a step
+    whose base manifest was GC'd (or never landed) is excluded. What an
+    operator should consult before picking a restore target."""
+    from repro.core.async_snapshot import manifest_chain_steps
+    have = set(backend.list_steps())
+    out = []
+    for s in sorted(have):
+        try:
+            chain = manifest_chain_steps(backend, s)
+        except FileNotFoundError:
+            continue
+        if all(b in have for b in chain):
+            out.append(s)
+    return out
 
 
 def fresh_lower_half(restored: RestoredState,

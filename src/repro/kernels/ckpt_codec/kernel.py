@@ -54,6 +54,32 @@ def quantize_blocks(xb: jax.Array, *, interpret: bool = False):
     )(xb)
 
 
+def _xor_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jax.lax.bitwise_xor(a_ref[...], b_ref[...])
+
+
+def xor_blocks(a: jax.Array, b: jax.Array, *, interpret: bool = False):
+    """Byte-level XOR delta for chained snapshots, vectorized as int32
+    lanes: a, b are [nb, BLOCK] int32 views of the raw payload (ops.py
+    does the byte reinterpretation + padding). One VMEM pass, pure
+    VPU work — HBM-bandwidth-bound like the quantizer."""
+    nb = a.shape[0]
+    rows = min(ROWS_PER_TILE, nb)
+    assert nb % rows == 0, (nb, rows)
+    grid = (nb // rows,)
+    return pl.pallas_call(
+        _xor_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((rows, BLOCK), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, BLOCK), jnp.int32),
+        interpret=interpret,
+    )(a, b)
+
+
 def _dequant_kernel(q_ref, s_ref, x_ref):
     q = q_ref[...].astype(jnp.float32)
     x_ref[...] = q * s_ref[...][:, None]

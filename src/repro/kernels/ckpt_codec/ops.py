@@ -35,6 +35,46 @@ def quantize(x: jax.Array, *, interpret: bool = None):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def _xor_i32(a: jax.Array, b: jax.Array, *, interpret: bool = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    nb = a.shape[0]
+    rows = min(K.ROWS_PER_TILE, nb)
+    rpad = (-nb) % rows
+    if rpad:
+        a = jnp.pad(a, ((0, rpad), (0, 0)))
+        b = jnp.pad(b, ((0, rpad), (0, 0)))
+    return K.xor_blocks(a, b, interpret=interpret)[:nb]
+
+
+def delta_encode(x: np.ndarray, prev: np.ndarray, *,
+                 interpret: bool = None) -> np.ndarray:
+    """Byte XOR of two equal-length byte buffers through the Pallas
+    kernel (TPU path of the chained snapshot encoder; the host path in
+    core.delta uses numpy directly). Returns uint8[len]."""
+    a = np.frombuffer(np.ascontiguousarray(x), np.uint8)
+    b = np.frombuffer(np.ascontiguousarray(prev), np.uint8)
+    assert a.size == b.size, (a.size, b.size)
+    n = a.size
+    lane_bytes = 4 * BLOCK
+    pad = (-n) % lane_bytes
+    if pad:
+        a = np.concatenate([a, np.zeros(pad, np.uint8)])
+        b = np.concatenate([b, np.zeros(pad, np.uint8)])
+    ai = jnp.asarray(a.view(np.int32).reshape(-1, BLOCK))
+    bi = jnp.asarray(b.view(np.int32).reshape(-1, BLOCK))
+    out = np.asarray(jax.device_get(_xor_i32(ai, bi, interpret=interpret)))
+    return out.view(np.uint8).reshape(-1)[:n]
+
+
+def delta_decode(delta: np.ndarray, prev: np.ndarray, dtype,
+                 shape) -> np.ndarray:
+    """XOR is its own inverse; reinterpret the result."""
+    raw = delta_encode(delta, prev)
+    return np.frombuffer(raw.tobytes(), dtype=dtype).reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def dequantize(q: jax.Array, scale: jax.Array, *, interpret: bool = None):
     if interpret is None:
         interpret = not _on_tpu()

@@ -85,9 +85,10 @@ def pipeline_forward(
         P(*((None,) + tuple(extra_specs))),
     )
     out_specs = P(*((None,) + tuple(extra_specs)))
-    return jax.shard_map(
+    from repro.parallel.context import shard_map_compat
+    return shard_map_compat(
         stage_fn, mesh=mesh,
-        in_specs=in_specs, out_specs=out_specs, check_vma=False,
+        in_specs=in_specs, out_specs=out_specs,
     )(stacked_params, x_microbatches)
 
 

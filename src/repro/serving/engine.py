@@ -162,7 +162,8 @@ class ServingEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params, mesh, n_slots: int,
-                 max_seq: int, plan: Optional[ParallelPlan] = None):
+                 max_seq: int, plan: Optional[ParallelPlan] = None,
+                 manager=None, lower=None):
         self.cfg = cfg
         self.params = params
         shape = ShapeConfig("engine", max_seq, n_slots, "decode")
@@ -176,6 +177,41 @@ class ServingEngine:
         self.slot_tok = np.zeros((n_slots, 1), np.int32)
         self.queue: List[Request] = []
         self.steps = 0
+        # optional live-session checkpointing (core.async_snapshot):
+        # manager drains snapshots in the background, lower's op-log (if
+        # the engine was built through the logged runtime) rides along so
+        # a restore can replay CacheAlloc/Compile
+        self.manager = manager
+        self.lower = lower
+
+    # --- live-session checkpointing ------------------------------------
+
+    def session_state(self):
+        """The engine's semantic (upper-half) state: cache contents plus
+        slot bookkeeping. Params are the trainer's job, not ours."""
+        from repro.core.split_state import UpperHalf
+        up = UpperHalf()
+        up.register("kv_cache", "cache", self.cache)
+        up.register("sessions", "sessions", {
+            "slot_pos": np.array(self.slot_pos),
+            "slot_tok": np.array(self.slot_tok),
+        })
+        up.register("steps", "step", np.int64(self.steps))
+        return up
+
+    def snapshot(self):
+        """Non-blocking snapshot of live sessions at an engine-step
+        boundary; decode keeps running while the pipeline encodes and
+        writes. Returns the SnapshotHandle (None if dropped under
+        "skip" backpressure)."""
+        assert self.manager is not None, "construct with manager= to snapshot"
+        from repro.core.oplog import OpLog
+        log = self.lower.oplog if self.lower is not None else OpLog()
+        return self.manager.save(self.steps, self.session_state(), log,
+                                 block=False,
+                                 job_meta={"kind": "serving",
+                                           "n_slots": self.n_slots,
+                                           "max_seq": self.max_seq})
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -227,7 +263,13 @@ class ServingEngine:
         self.steps += 1
         return len(active)
 
-    def run_until_drained(self, max_steps: int = 10_000) -> None:
+    def run_until_drained(self, max_steps: int = 10_000,
+                          snapshot_every: Optional[int] = None) -> None:
         while (self.queue or any(self.slot_req)) and max_steps > 0:
             self.step()
+            if snapshot_every and self.steps % snapshot_every == 0 \
+                    and self.manager is not None:
+                self.snapshot()
             max_steps -= 1
+        if snapshot_every and self.manager is not None:
+            self.manager.wait()

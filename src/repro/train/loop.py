@@ -163,6 +163,30 @@ class Trainer:
                           self.lower.oplog, block=block,
                           job_meta=self.job_meta())
 
+    def snapshot(self):
+        """Non-blocking checkpoint at the current step boundary: pays
+        only the device→staging capture; delta encode + backend writes
+        overlap the next train_steps() on the pipeline threads. Returns
+        the SnapshotHandle (None if dropped under "skip" backpressure)."""
+        assert self.manager is not None
+        return self.manager.save(int(self.upper.get("step")), self.upper,
+                                 self.lower.oplog, block=False,
+                                 job_meta=self.job_meta())
+
+    def train(self, n_steps: int, snapshot_every: Optional[int] = None,
+              ) -> Dict[str, float]:
+        """Step loop with overlapped checkpointing: snapshots are
+        captured at step boundaries and drain in the background."""
+        metrics: Dict[str, float] = {}
+        for i in range(1, n_steps + 1):
+            metrics = self.train_steps(1)
+            if snapshot_every and self.manager is not None \
+                    and i % snapshot_every == 0:
+                self.snapshot()
+        if self.manager is not None and snapshot_every:
+            self.manager.wait()
+        return metrics
+
     @classmethod
     def restore(cls, manager: CheckpointManager,
                 mesh_factory: Optional[Callable] = None,

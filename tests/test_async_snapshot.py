@@ -1,0 +1,365 @@
+"""Async snapshot pipeline: delta chains, commit atomicity under crashes,
+backpressure, capture isolation — the capture/encode/commit contract."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (AsyncSnapshotter, CheckpointManager, LocalFSBackend,
+                        OpLog, ShardedBackend, UpperHalf,
+                        manifest_chain_steps, materialize_manifest_chain)
+from repro.core.delta import CHUNK_BYTES, encode_leaf, decode_leaf
+from repro.core.restore import restorable_steps
+
+
+def _mk_upper(rng, n=50_000):
+    up = UpperHalf()
+    up.register("params", "params",
+                {"w": rng.randn(n).astype(np.float32),
+                 "b": rng.randn(64).astype(np.float32)})
+    up.register("step", "step", np.int64(0))
+    return up
+
+
+# ---------------------------------------------------------------------------
+# delta chain
+# ---------------------------------------------------------------------------
+
+def test_delta_chain_roundtrip_bit_identical(tmp_path):
+    """base + N XOR deltas -> every intermediate step restores to the
+    exact bytes that were live when it was captured."""
+    rng = np.random.RandomState(0)
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)),
+                            async_save=False, delta_base_interval=4)
+    up = _mk_upper(rng)
+    want = {}
+    for s in range(1, 9):
+        # sparse update: most bytes unchanged step-over-step
+        w = up.get("params")["w"]
+        idx = rng.randint(0, w.size, size=w.size // 100)
+        w[idx] += rng.randn(idx.size).astype(np.float32)
+        up.update("step", np.int64(s))
+        mgr.save(s, up, OpLog())
+        want[s] = {"w": w.copy(), "b": up.get("params")["b"].copy()}
+
+    # manifests actually chain: steps 2-4 hang off 1, 6-8 off 5
+    be = mgr.backend
+    assert be.get_manifest(1)["base_step"] is None
+    assert be.get_manifest(2)["base_step"] == 1
+    assert be.get_manifest(4)["base_step"] == 3
+    assert be.get_manifest(5)["base_step"] is None
+    assert manifest_chain_steps(be, 4) == [1, 2, 3, 4]
+
+    for s in range(1, 9):
+        r = mgr.restore(s)
+        np.testing.assert_array_equal(r.entries["params"]["['w']"],
+                                      want[s]["w"])
+        np.testing.assert_array_equal(r.entries["params"]["['b']"],
+                                      want[s]["b"])
+        assert int(r.entries["step"][""]) == s
+
+
+def test_chain_unchanged_leaf_writes_nothing(tmp_path):
+    """An untouched tensor's XOR delta is all zero chunks — elided
+    entirely, zero blob bytes."""
+    rng = np.random.RandomState(1)
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)),
+                            async_save=False, delta_base_interval=10)
+    up = _mk_upper(rng, n=300_000)
+    mgr.save(1, up, OpLog())
+    first = mgr.stats["bytes_written"]
+    mgr.save(2, up, OpLog())  # nothing changed: pure zero-delta link
+    assert mgr.stats["bytes_written"] == first
+    m = mgr.backend.get_manifest(2)
+    leaf = m["entries"]["params"]["leaves"]["['w']"]
+    assert leaf["mode"] == "xor"
+    assert all(c is None for c in leaf["parts"]["raw"]["chunks"])
+    r = mgr.restore(2)
+    np.testing.assert_array_equal(r.entries["params"]["['w']"],
+                                  up.get("params")["w"])
+
+
+def test_gc_keeps_base_closure(tmp_path):
+    """keep_last must not break a kept checkpoint's chain: its full base
+    (and intermediate links) survive GC even when older than the cut."""
+    rng = np.random.RandomState(2)
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False,
+                            delta_base_interval=5, keep_last=2)
+    up = _mk_upper(rng)
+    for s in range(1, 5):
+        up.get("params")["w"][:100] += 1.0
+        mgr.save(s, up, OpLog())
+        want_w = up.get("params")["w"].copy()
+    steps = mgr.backend.list_steps()
+    # 3 and 4 kept; their chain back to base 1 must survive too
+    assert set(steps) == {1, 2, 3, 4}
+    assert restorable_steps(mgr.backend) == [1, 2, 3, 4]
+    r = mgr.restore(4)
+    np.testing.assert_array_equal(r.entries["params"]["['w']"], want_w)
+
+
+def test_restorable_steps_excludes_broken_chain(tmp_path):
+    rng = np.random.RandomState(3)
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False,
+                            delta_base_interval=5)
+    up = _mk_upper(rng)
+    for s in (1, 2, 3):
+        up.get("params")["w"][:10] += 1.0
+        mgr.save(s, up, OpLog())
+    mgr.backend.delete_step(2)  # sever the chain
+    assert restorable_steps(mgr.backend) == [1]
+
+
+# ---------------------------------------------------------------------------
+# crash safety
+# ---------------------------------------------------------------------------
+
+class _CrashingBackend(LocalFSBackend):
+    """Injects a crash after N successful blob writes."""
+
+    def __init__(self, root, crash_after):
+        super().__init__(root)
+        self.crash_after = crash_after
+        self.writes = 0
+        self._lock = threading.Lock()
+
+    def put_blob(self, name, data):
+        with self._lock:
+            if self.writes >= self.crash_after:
+                raise OSError("injected crash: writer died mid-checkpoint")
+            self.writes += 1
+        super().put_blob(name, data)
+
+
+def test_crash_during_commit_previous_checkpoint_survives(tmp_path):
+    """A snapshot that dies mid-write publishes nothing: the previous
+    manifest stays 'latest' and still restores; the failure surfaces on
+    wait(); stray temp files are swept on reopen."""
+    rng = np.random.RandomState(4)
+    be = _CrashingBackend(str(tmp_path), crash_after=10**9)
+    mgr = CheckpointManager(be, async_save=True)
+    up = _mk_upper(rng, n=200_000)
+    mgr.save(1, up, OpLog())
+    mgr.wait()
+
+    be.crash_after = be.writes  # die on the next save's first blob
+    up.get("params")["w"][:] += 1.0
+    mgr.save(2, up, OpLog())
+    # let the failure fully retire before wait(): a fire-and-forget
+    # caller must still see it (not only races that catch it in flight)
+    deadline = time.monotonic() + 5
+    while mgr.stats["failed"] == 0 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    with pytest.raises(OSError, match="injected crash"):
+        mgr.wait()
+    mgr.wait()  # raised once, then cleared
+
+    assert be.list_steps() == [1]          # step 2 never became visible
+    r = mgr.restore()                       # latest == the survivor
+    assert r.step == 1
+
+    # the pipeline stays usable after a failed snapshot
+    be.crash_after = 10**9
+    mgr.save(3, up, OpLog())
+    mgr.wait()
+    assert mgr.restore().step == 3
+
+    # a reopened backend sweeps stale torn temp files — but only stale
+    # ones: a fresh .tmp may be a live writer in another process
+    import os
+    d = be.root / "blobs" / "aa"
+    d.mkdir(parents=True, exist_ok=True)
+    (d / ".tmp_torn").write_bytes(b"partial")
+    (d / ".tmp_live").write_bytes(b"in flight")
+    os.utime(d / ".tmp_torn", (1, 1))  # ancient
+    be2 = LocalFSBackend(str(tmp_path))
+    assert not (d / ".tmp_torn").exists()
+    assert (d / ".tmp_live").exists()
+
+
+def test_manifest_commit_is_atomic_publication(tmp_path):
+    """Blobs without a manifest are invisible; the manifest rename is
+    the single publication point (both backends)."""
+    for be in (LocalFSBackend(str(tmp_path / "fs")),
+               ShardedBackend(str(tmp_path / "sh"), n_hosts=3)):
+        be.put_blob("aa" + "0" * 38, b"garbage from a crashed writer")
+        assert be.list_steps() == []
+        mgr = CheckpointManager(be, async_save=False)
+        rng = np.random.RandomState(5)
+        mgr.save(7, _mk_upper(rng), OpLog())
+        assert mgr.restore().step == 7
+
+
+# ---------------------------------------------------------------------------
+# backpressure / overlap
+# ---------------------------------------------------------------------------
+
+class _SlowBackend(LocalFSBackend):
+    def __init__(self, root, delay=0.05):
+        super().__init__(root, fsync=False)
+        self.delay = delay
+
+    def put_blob(self, name, data):
+        time.sleep(self.delay)
+        super().put_blob(name, data)
+
+
+def test_backpressure_skip_drops_when_saturated(tmp_path):
+    """Snapshots requested faster than the writer drains: "skip" policy
+    drops the excess (counted), never queues unboundedly."""
+    rng = np.random.RandomState(6)
+    mgr = CheckpointManager(_SlowBackend(str(tmp_path)), async_save=True,
+                            backpressure="skip", writers=1)
+    up = _mk_upper(rng, n=200_000)
+    handles = []
+    for s in range(1, 8):
+        up.get("params")["w"][:10] += 1.0
+        handles.append(mgr.save(s, up, OpLog()))
+    mgr.wait()
+    skipped = mgr.stats["skipped"]
+    assert skipped == sum(h is None for h in handles)
+    assert skipped >= 1, "slow backend must saturate the 2-slot pipeline"
+    assert mgr.stats["saves"] == 7 - skipped
+    # committed ones restore fine
+    r = mgr.restore()
+    assert r.step == max(s for s, h in zip(range(1, 8), handles)
+                         if h is not None)
+
+
+def test_blocking_save_overrides_skip_policy(tmp_path):
+    """save(block=True) under a "skip" policy must wait for a slot, not
+    silently drop — e.g. the final checkpoint of a run."""
+    rng = np.random.RandomState(12)
+    mgr = CheckpointManager(_SlowBackend(str(tmp_path)), async_save=True,
+                            backpressure="skip", writers=1)
+    up = _mk_upper(rng, n=200_000)
+    for s in range(1, 6):
+        up.get("params")["w"][:10] += 1.0
+        mgr.save(s, up, OpLog())
+    mgr.save(6, up, OpLog(), block=True)
+    assert mgr.backend.latest_step() == 6
+
+
+def test_keep_last_zero_keeps_everything(tmp_path):
+    """keep_last <= 0 means no retention limit — it must never mean
+    'delete every checkpoint just committed'."""
+    rng = np.random.RandomState(13)
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False,
+                            keep_last=0)
+    up = _mk_upper(rng, n=10_000)
+    for s in (1, 2, 3):
+        mgr.save(s, up, OpLog())
+    assert mgr.backend.list_steps() == [1, 2, 3]
+    assert mgr.restore(2).step == 2
+
+
+def test_handled_blocking_failure_not_reraised_by_wait(tmp_path):
+    """An error delivered to a blocking save() is consumed there; a
+    later wait() after successful snapshots must not resurrect it."""
+    rng = np.random.RandomState(14)
+    be = _CrashingBackend(str(tmp_path), crash_after=0)
+    mgr = CheckpointManager(be, async_save=False)
+    up = _mk_upper(rng)
+    with pytest.raises(OSError, match="injected crash"):
+        mgr.save(1, up, OpLog())
+    be.crash_after = 10**9
+    mgr.save(2, up, OpLog())   # retry succeeds
+    mgr.wait()                 # must NOT re-raise the handled failure
+    assert mgr.restore().step == 2
+
+
+def test_backpressure_block_commits_everything_in_order(tmp_path):
+    rng = np.random.RandomState(7)
+    mgr = CheckpointManager(_SlowBackend(str(tmp_path), delay=0.01),
+                            async_save=True, backpressure="block")
+    up = _mk_upper(rng, n=50_000)
+    for s in range(1, 6):
+        up.get("params")["w"][:10] += 1.0
+        mgr.save(s, up, OpLog())
+    mgr.wait()
+    assert mgr.stats["skipped"] == 0
+    assert mgr.backend.list_steps() == [1, 2, 3, 4, 5]
+
+
+def test_capture_isolation_under_chaining(tmp_path):
+    """Mutating state right after snapshot() must affect neither the
+    in-flight snapshot nor the XOR base of the next one."""
+    rng = np.random.RandomState(8)
+    mgr = CheckpointManager(_SlowBackend(str(tmp_path), delay=0.01),
+                            async_save=True, delta_base_interval=3)
+    up = _mk_upper(rng, n=100_000)
+    want = {}
+    for s in (1, 2, 3):
+        mgr.save(s, up, OpLog())
+        want[s] = up.get("params")["w"].copy()
+        up.get("params")["w"][:] += 1.0   # mutate while encode in flight
+    mgr.wait()
+    for s in (1, 2, 3):
+        np.testing.assert_array_equal(
+            mgr.restore(s).entries["params"]["['w']"], want[s])
+
+
+def test_async_overlaps_caller_thread(tmp_path):
+    """snapshot() returns before the backend finishes writing — the
+    caller-side stall is the capture, not the commit."""
+    rng = np.random.RandomState(9)
+    slow = _SlowBackend(str(tmp_path), delay=0.05)
+    mgr = CheckpointManager(slow, async_save=True)
+    up = _mk_upper(rng, n=int(1.5 * CHUNK_BYTES / 4))  # several chunks
+    t0 = time.monotonic()
+    h = mgr.save(1, up, OpLog())
+    returned = time.monotonic() - t0
+    assert not h.done(), "commit should still be in flight"
+    mgr.wait()
+    total = time.monotonic() - t0
+    assert returned < total, (returned, total)
+
+
+def test_repeated_chunks_within_snapshot_dedup_once(tmp_path):
+    """Identical chunks inside one async snapshot (e.g. zero-initialized
+    weights spanning several chunks) must be written and counted once,
+    even though the writer pool hasn't landed the first copy yet when
+    the next one is encoded."""
+    rng = np.random.RandomState(15)
+    mgr = CheckpointManager(_SlowBackend(str(tmp_path), delay=0.05),
+                            async_save=True, writers=1, compress=False)
+    up = UpperHalf()
+    n = 3 * CHUNK_BYTES // 4  # three identical all-zero 4 MiB chunks
+    up.register("params", "params", {"w": np.zeros(n, np.float32)})
+    mgr.save(1, up, OpLog())
+    mgr.wait()
+    assert mgr.stats["bytes_written"] == CHUNK_BYTES
+    r = mgr.restore()
+    assert not r.entries["params"]["['w']"].any()
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# codec unit: xor leaf + pallas xor kernel vs numpy
+# ---------------------------------------------------------------------------
+
+def test_encode_leaf_xor_roundtrip_sub_chunk_tail():
+    """XOR leaves with a non-chunk-aligned tail roundtrip exactly."""
+    rng = np.random.RandomState(10)
+    prev = rng.randn(CHUNK_BYTES // 4 + 123).astype(np.float32)
+    cur = prev.copy()
+    cur[::1000] += 2.0
+    blobs = {}
+    meta = encode_leaf(cur, lambda n, d: blobs.setdefault(n, d),
+                       lambda n: n in blobs, prev=prev)
+    assert meta["mode"] == "xor"
+    back = decode_leaf(meta, blobs.__getitem__, prev=prev)
+    np.testing.assert_array_equal(back, cur)
+
+
+def test_pallas_xor_kernel_matches_numpy():
+    ops = pytest.importorskip("repro.kernels.ckpt_codec.ops")
+    rng = np.random.RandomState(11)
+    x = rng.randn(3000).astype(np.float32)
+    prev = x + rng.randn(3000).astype(np.float32)
+    delta = ops.delta_encode(x, prev)
+    ref = np.bitwise_xor(x.view(np.uint8), prev.view(np.uint8))
+    np.testing.assert_array_equal(delta, ref)
+    back = ops.delta_decode(delta, prev, np.float32, (3000,))
+    np.testing.assert_array_equal(back, x)

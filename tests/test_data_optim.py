@@ -1,6 +1,9 @@
 """Data pipeline determinism/seek + optimizer semantics + failure logic."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -1,7 +1,12 @@
 """Multi-device tests (subprocess with virtual host devices): sharded
 training, elastic restore across topologies, MoE expert parallelism,
-dry-run machinery. See conftest.run_with_devices."""
+dry-run machinery. See conftest.run_with_devices.
+
+Marked slow (each case spawns a fresh jax process): excluded from the
+default tier-1 run; opt in with  pytest -m slow  or  pytest -m ""."""
 import pytest
+
+pytestmark = pytest.mark.slow
 
 
 def test_sharded_train_matches_single_device(subproc):
@@ -129,13 +134,14 @@ def test_grad_compression_shard_map(subproc):
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.optim.compression import compressed_psum, init_error_feedback
+    from repro.parallel.context import shard_map_compat
     mesh = jax.make_mesh((8,), ("data",))
     g = jax.random.normal(jax.random.PRNGKey(0), (8, 1024), jnp.float32)
     ef = jnp.zeros((8, 1024), jnp.float32)
     def f(gl, el):
         red, e2 = compressed_psum({"w": gl[0]}, {"w": el[0]}, "data")
         return red["w"][None], e2["w"][None]
-    red, e2 = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P("data"), P("data")),
+    red, e2 = jax.jit(shard_map_compat(f, mesh=mesh, in_specs=(P("data"), P("data")),
                       out_specs=(P("data"), P("data"))))(g, ef)
     exact = jnp.mean(g, axis=0)
     got = np.asarray(red[0])

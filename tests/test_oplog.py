@@ -3,6 +3,9 @@ the paper's §III invariants."""
 import json
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (LowerHalf, OpLog, VirtualId, HandleTable,

@@ -9,6 +9,10 @@ import jax
 from repro.core import (CheckpointManager, LocalFSBackend, ShardedBackend)
 from repro.train.loop import Trainer, TrainJob
 
+# each case trains a real (smoke-scale) model end-to-end; excluded from
+# the default tier-1 run — opt in with  pytest -m slow  or  pytest -m ""
+pytestmark = pytest.mark.slow
+
 JOB = TrainJob(arch="qwen2.5-32b-smoke", shape_key="train_s16_b4")
 
 
