@@ -1,7 +1,12 @@
-"""Serving with session snapshots: continuous batching over a small
-model; live KV caches checkpoint as upper-half state and a restored
-engine continues generating the same tokens (the 'artist resumes where
-Maya crashed' story, for inference sessions).
+"""Serving with live-session snapshots: the paper's §IV demo (the
+artist reopens Maya and the scene is still there) for inference.
+
+A continuous-batching engine built through the logged C/R runtime
+snapshots its *complete* session state mid-generation — KV cache,
+in-flight requests with their partial outputs, the waiting queue — and
+a later ``ServingEngine.restore`` brings every session back, even onto
+a *different slot count* (elastic re-slotting: each session's KV slice
+is rebuilt by replaying its token history through prefill).
 
     PYTHONPATH=src python examples/serving_with_snapshots.py
 """
@@ -11,8 +16,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core import CheckpointManager, LocalFSBackend, OpLog, UpperHalf
-from repro.core.split_state import fill_like
+from repro.core import CheckpointManager, LocalFSBackend
 from repro.models import model as M
 from repro.serving.engine import Request, ServingEngine
 
@@ -20,59 +24,54 @@ from repro.serving.engine import Request, ServingEngine
 def main() -> None:
     cfg = get_smoke_config("phi4-mini-3.8b")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=5) for _ in range(4)]
+
+    # reference: the uninterrupted run
     mesh = jax.sharding.Mesh(
         np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    ref_eng = ServingEngine(cfg, params, mesh, n_slots=2, max_seq=48)
+    refs = [Request(rid=i, prompt=p.copy(), max_new=8)
+            for i, p in enumerate(prompts)]
+    for r in refs:
+        ref_eng.submit(r)
+    ref_eng.run_until_drained(max_steps=200)
+    ref = {r.rid: list(r.out) for r in refs}
 
-    eng = ServingEngine(cfg, params, mesh, n_slots=2, max_seq=48)
-    rng = np.random.RandomState(0)
-    reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab_size, size=5),
-                    max_new=8) for i in range(4)]
-    for r in reqs:
-        eng.submit(r)
-
-    # serve halfway, then snapshot the live session state
-    for _ in range(4):
-        eng.step()
-    up = UpperHalf()
-    up.register("kv_cache", "cache", eng.cache)
-    up.register("slot_pos", "meta", np.array(eng.slot_pos))
-    up.register("slot_tok", "meta", np.array(eng.slot_tok))
+    # the interrupted run: engine under the logged runtime, snapshot
+    # mid-generation (non-blocking in production; blocking here so the
+    # 'crash' below can't outrun the commit)
     mgr = CheckpointManager(
         LocalFSBackend(tempfile.mkdtemp(prefix="repro_serve_")),
-        async_save=False)
-    mgr.save(eng.steps, up, OpLog())
-    print(f"[snapshot] engine at step {eng.steps}, "
-          f"{sum(r.done for r in reqs)} requests done")
+        async_save=True)
+    eng = ServingEngine.create("phi4-mini-3.8b-smoke", params, (1, 1),
+                               n_slots=2, max_seq=48, manager=mgr)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=8)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    eng.snapshot(block=True)
+    print(f"[snapshot] engine step {eng.steps}: "
+          f"{sum(r is not None for r in eng.slot_req)} in flight, "
+          f"{len(eng.queue)} queued")
+    del eng  # crash: engine, executables, device buffers all gone
 
-    # finish the original engine for reference outputs
-    mid_outputs = {r.rid: list(r.out) for r in reqs}
-    eng.run_until_drained(max_steps=200)
-    ref = {r.rid: list(r.out) for r in reqs}
-
-    # 'crash' + restore into a fresh engine (fresh lower half: new cache
-    # buffers; upper half rebinds the session)
-    r = mgr.restore()
-    eng2 = ServingEngine(cfg, params, mesh, n_slots=2, max_seq=48)
-    eng2.cache = jax.tree.map(
-        jax.numpy.asarray, fill_like(eng2.cache, r.entries["kv_cache"]))
-    eng2.slot_pos = np.asarray(r.entries["slot_pos"][""]).copy()
-    eng2.slot_tok = np.asarray(r.entries["slot_tok"][""]).copy()
-    # resubmit the in-flight requests with their partial outputs
-    for req in reqs:
-        req.out = list(mid_outputs[req.rid])
-        req.done = False
-    eng2.slot_req = [reqs[0], reqs[1]]
-    eng2.queue = [q for q in reqs[2:]
-                  if len(mid_outputs[q.rid]) < q.max_new]
-    for q in eng2.queue:
-        q.out = []
+    # restore onto THREE slots (the checkpoint had two): every live
+    # session re-enters through prefill replay of its history
+    eng2 = ServingEngine.restore(mgr, params, n_slots=3)
+    live = eng2.live_requests()
+    print(f"[restore] engine step {eng2.steps} on {eng2.n_slots} slots, "
+          f"{len(live)} sessions resumed "
+          f"(materialize {eng2.incarnation.timings['materialize_s']:.2f}s, "
+          f"replay {eng2.incarnation.timings['replay_s']:.2f}s)")
     eng2.run_until_drained(max_steps=200)
-    got = {q.rid: list(q.out) for q in reqs}
 
-    for rid in (0, 1):  # the two in-flight sessions must continue exactly
-        assert got[rid] == ref[rid], (rid, got[rid], ref[rid])
-    print("[check] restored sessions continued identically:",
-          {k: v for k, v in got.items()})
+    for r in live:  # every resumed session must continue exactly
+        assert r.out == ref[r.rid], (r.rid, r.out, ref[r.rid])
+    print("[check] restored sessions finished token-identically:",
+          {r.rid: r.out for r in live})
 
 
 if __name__ == "__main__":

@@ -7,14 +7,16 @@ from repro.core.oplog import (
 )
 from repro.core.split_state import (
     UpperHalf, LowerHalf, StateEntry, register_step_fn, FUNCTION_REGISTRY,
-    fill_like, flatten_with_paths,
+    fill_like, flatten_with_paths, tree_from_paths,
 )
 from repro.core.checkpoint import CheckpointManager, RestoredState
 from repro.core.async_snapshot import (
     AsyncSnapshotter, SnapshotHandle,
     materialize_manifest_chain, manifest_chain_steps,
 )
-from repro.core.restore import fresh_lower_half, materialize_entry
+from repro.core.restore import (fresh_lower_half, materialize_entry,
+                                restorable_steps)
+from repro.core.incarnation import Incarnation, LifecycleError
 from repro.core.backends import make_backend, LocalFSBackend, ShardedBackend
 from repro.core.failure import (
     HeartbeatMonitor, StragglerDetector, FailurePolicy, FailureAction,

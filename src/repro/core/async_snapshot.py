@@ -442,31 +442,66 @@ def manifest_chain_steps(backend: CheckpointBackend, step: int) -> List[int]:
     return chain
 
 
+def _decode_chain_leaf(manifests: List[Dict[str, Any]], backend,
+                       name: str, path: str) -> np.ndarray:
+    """Decode one leaf of the final manifest: walk base links back only
+    as far as its run of xor modes reaches (a full or codec leaf needs
+    no predecessor), then decode forward, XOR-applying each link."""
+    i = len(manifests) - 1
+    while i > 0 and (manifests[i]["entries"][name]["leaves"][path]
+                     .get("mode") == "xor"):
+        i -= 1  # xor decodes against the predecessor's value
+    val: Optional[np.ndarray] = None
+    for m in manifests[i:]:
+        val = deltamod.decode_leaf(
+            m["entries"][name]["leaves"][path], backend.get_blob, prev=val)
+    return val
+
+
+# below this leaf count a worker pool costs more than it hides; tiny
+# checkpoints (scalars + a couple of tensors) decode inline
+_PARALLEL_DECODE_MIN_LEAVES = 4
+
+
 def materialize_manifest_chain(
-    backend: CheckpointBackend, step: int,
+    backend: CheckpointBackend, step: int, workers: Optional[int] = None,
+    skip_entries=(),
 ) -> Tuple[Dict[str, Any], Dict[str, Dict[str, np.ndarray]]]:
-    """Delta chain -> full state. For each leaf of the target manifest,
-    walk base links back only as far as its run of xor modes reaches (a
-    full or codec leaf needs no predecessor), then decode forward,
-    XOR-applying each link. Leaves that exist only in intermediate
-    manifests — or are non-xor there — are never decoded, so restore
-    cost per leaf is O(xor-run length), not O(chain length)."""
+    """Delta chain -> full state. Each leaf decodes independently (its
+    own xor-run walk), so leaves fan out across a worker pool — restore
+    latency is bounded by the largest leaf's chain, not the sum of all
+    of them. Leaves that exist only in intermediate manifests — or are
+    non-xor there — are never decoded, so restore cost per leaf stays
+    O(xor-run length), not O(chain length).
+
+    ``workers``: decode pool size; default scales with the host, 1
+    forces the serial path (both orders produce identical arrays).
+    ``skip_entries``: entry names to leave undecoded (absent from the
+    result) — a caller that rebuilds an entry from scratch, like the
+    serving engine re-slotting its KV cache, shouldn't pay its chain."""
     manifests = [backend.get_manifest(s)
                  for s in manifest_chain_steps(backend, step)]
     final = manifests[-1]
+    skip = set(skip_entries)
+    tasks = [(name, path) for name, e in final["entries"].items()
+             if name not in skip for path in e["leaves"]]
+    if workers is None:
+        import os
+        workers = min(8, os.cpu_count() or 1)
+    if workers > 1 and len(tasks) >= _PARALLEL_DECODE_MIN_LEAVES:
+        with ThreadPoolExecutor(max_workers=workers,
+                                thread_name_prefix="chain-decode") as pool:
+            vals = list(pool.map(
+                lambda t: _decode_chain_leaf(manifests, backend, *t), tasks))
+    else:
+        vals = [_decode_chain_leaf(manifests, backend, name, path)
+                for name, path in tasks]
     entries: Dict[str, Dict[str, np.ndarray]] = {}
-    for name, e in final["entries"].items():
-        leaves: Dict[str, np.ndarray] = {}
-        for path in e["leaves"]:
-            i = len(manifests) - 1
-            while i > 0 and (manifests[i]["entries"][name]["leaves"][path]
-                             .get("mode") == "xor"):
-                i -= 1  # xor decodes against the predecessor's value
-            val: Optional[np.ndarray] = None
-            for m in manifests[i:]:
-                val = deltamod.decode_leaf(
-                    m["entries"][name]["leaves"][path],
-                    backend.get_blob, prev=val)
-            leaves[path] = val
-        entries[name] = leaves
+    for (name, path), val in zip(tasks, vals):
+        entries.setdefault(name, {})[path] = val
+    # entries present in the manifest but empty of leaves (e.g. an empty
+    # request queue) must still appear in the restored state
+    for name in final["entries"]:
+        if name not in skip:
+            entries.setdefault(name, {})
     return final, entries

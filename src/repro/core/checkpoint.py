@@ -121,13 +121,29 @@ class CheckpointManager:
 
     # --- restore ------------------------------------------------------------
 
-    def restore(self, step: Optional[int] = None) -> RestoredState:
+    def resolve_step(self, step: Optional[int] = None) -> int:
+        """Drain in-flight snapshots, then resolve a restore target:
+        the latest committed step when ``step`` is None. Raises
+        FileNotFoundError when nothing is committed."""
         self.wait()
         if step is None:
             step = self.backend.latest_step()
             if step is None:
                 raise FileNotFoundError("no committed checkpoints")
-        manifest, entries = materialize_manifest_chain(self.backend, step)
+        return step
+
+    def restore(self, step: Optional[int] = None,
+                workers: Optional[int] = None,
+                skip_entries=()) -> RestoredState:
+        """Materialize a committed checkpoint's delta chain into host
+        arrays. ``workers`` sizes the leaf-decode pool (restore latency
+        matters as much as checkpoint overhead — CRIUgpu's point);
+        ``skip_entries`` names entries the caller will rebuild instead
+        of rebind, left undecoded. The full restart lifecycle on top of
+        this is ``core.incarnation``."""
+        step = self.resolve_step(step)
+        manifest, entries = materialize_manifest_chain(
+            self.backend, step, workers=workers, skip_entries=skip_entries)
         oplog = OpLog.from_json(manifest["oplog"])
         return RestoredState(step=step, manifest=manifest, entries=entries,
                              oplog=oplog)

@@ -1,22 +1,13 @@
-"""Restore protocol (paper §II-III): fresh lower half + log replay +
-upper-half rebinding, with elastic resharding.
+"""Restore primitives (paper §II-III): the per-phase building blocks of
+the restart sequence.
 
-Sequence (mirrors the paper's restart exactly):
-  0. materialize the payload: ``CheckpointManager.restore`` walks the
-     format-2 manifest's ``base_step`` delta chain back to its full base
-     snapshot, decodes the base, and XOR-applies each delta link forward
-     (core.async_snapshot.materialize_manifest_chain) — the caller sees
-     plain host arrays regardless of how the snapshot was encoded.
-  1. construct a fresh LowerHalf — the 'load a fresh copy of OpenGL'
-     moment. An elastic restore passes a mesh_factory for the *new*
-     topology; the logged MeshCreate then binds the replacement mesh to
-     the same virtual mesh id.
-  2. replay the (pruned) op-log: recompiles step functions, re-allocates
-     caches, fast-forwards the data assignment — rebuilding driver state.
-  3. materialize the upper half: every leaf is device_put with a
-     NamedSharding derived from its *logical* axes and the new mesh's
-     plan. Because nothing in the payload references physical devices,
-     the same checkpoint lands on 512 chips, 256 chips, or 1 CPU.
+The lifecycle that *orders* these — materialize the delta chain, fresh
+LowerHalf + ``new_incarnation()``, op-log replay, upper-half rebinding
+with logical-axes shardings — is owned by ``core.incarnation.
+Incarnation``; both the trainer and the serving engine resume through
+it. This module keeps the phase primitives it calls (``materialize_
+entry``, ``restore_scalar``) plus operator-facing queries over a
+checkpoint directory (``restorable_steps``).
 """
 from __future__ import annotations
 
@@ -34,23 +25,30 @@ from jax.sharding import NamedSharding, PartitionSpec
 def restorable_steps(backend) -> List[int]:
     """Committed steps whose full delta chain is still present — a step
     whose base manifest was GC'd (or never landed) is excluded. What an
-    operator should consult before picking a restore target."""
-    from repro.core.async_snapshot import manifest_chain_steps
+    operator should consult before picking a restore target.
+
+    Each manifest is read exactly once: one ascending pass memoizes the
+    ``base_step`` links, and chain validity propagates base-first (a
+    sorted step's base is always <= it, so its verdict is already
+    known). O(n) manifest reads, not O(n * chain length)."""
     have = set(backend.list_steps())
-    out = []
+    base: Dict[int, Optional[int]] = {}
     for s in sorted(have):
         try:
-            chain = manifest_chain_steps(backend, s)
+            base[s] = backend.get_manifest(s).get("base_step")
         except FileNotFoundError:
-            continue
-        if all(b in have for b in chain):
-            out.append(s)
-    return out
+            continue  # raced a concurrent GC; treat as not restorable
+    ok: Dict[int, bool] = {}
+    for s in sorted(base):
+        b = base[s]
+        ok[s] = b is None or ok.get(b, False)
+    return [s for s in sorted(have) if ok.get(s, False)]
 
 
 def fresh_lower_half(restored: RestoredState,
                      mesh_factory: Optional[Callable] = None) -> LowerHalf:
-    """Steps 1-2: fresh runtime, replay the log."""
+    """Steps 1-2: fresh runtime, replay the log. (Single-phase shim —
+    new callers should drive core.incarnation.Incarnation instead.)"""
     lower = LowerHalf(mesh_factory=mesh_factory)
     restored.oplog.replay(lower)
     # the replayed ops become the new incarnation's log (so a subsequent

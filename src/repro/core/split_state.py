@@ -16,6 +16,7 @@ equivalent state by replay (core.oplog).
 from __future__ import annotations
 
 import json
+import re
 import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -37,6 +38,43 @@ from repro.core.virtual_ids import HandleTable, DeviceMap, VirtualId
 def flatten_with_paths(tree) -> List[Tuple[str, Any]]:
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     return [(jax.tree_util.keystr(p), v) for p, v in leaves]
+
+
+# keystr renders dict keys with repr(), which picks double quotes when
+# the key itself contains a single quote — accept both forms
+_DICT_KEY = re.compile(
+    r"\[(?:'((?:[^'\\]|\\.)*)'|\"((?:[^\"\\]|\\.)*)\")\]")
+
+
+def tree_from_paths(by_path: Dict[str, Any]) -> Any:
+    """Rebuild a nested dict from keystr paths, no template required.
+
+    Inverse of ``flatten_with_paths`` for dict-only pytrees (paths like
+    ``['queue']['0']['prompt']``). State whose *structure* is data — the
+    serving scheduler's request queue, whose shape differs checkpoint to
+    checkpoint — restores through this instead of ``fill_like``. The
+    path "" (a bare leaf) returns the leaf itself."""
+    if list(by_path) == [""]:
+        return by_path[""]
+    out: Dict[str, Any] = {}
+    for path, leaf in by_path.items():
+        keys = []
+        pos = 0
+        for m in _DICT_KEY.finditer(path):
+            if m.start() != pos:
+                break
+            k = m.group(1) if m.group(1) is not None else m.group(2)
+            keys.append(k.replace("\\'", "'").replace('\\"', '"')
+                         .replace("\\\\", "\\"))
+            pos = m.end()
+        if pos != len(path) or not keys:
+            raise ValueError(f"non-dict path {path!r}; use fill_like with "
+                             "a structural template instead")
+        node = out
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = leaf
+    return out
 
 
 def fill_like(template, by_path: Dict[str, Any]):

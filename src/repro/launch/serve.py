@@ -1,8 +1,16 @@
 """Serving launcher: continuous-batching engine over a registry arch
-(smoke configs for CPU; full configs on real hardware).
+(smoke configs for CPU; full configs on real hardware), under the C/R
+runtime when a checkpoint directory is given.
 
   PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b-smoke \
-      --requests 6 --max-new 8
+      --requests 6 --max-new 8 [--ckpt-dir /tmp/svc --snapshot-every 4]
+
+With ``--ckpt-dir`` the engine is built through the logged lower half
+and snapshots its live sessions (queue, in-flight requests, KV cache)
+every ``--snapshot-every`` steps. ``--resume [latest|STEP]`` restores a
+killed server and finishes the interrupted requests; pass a different
+``--slots`` to re-slot the sessions onto a larger or smaller engine
+(elastic serving restore).
 """
 from __future__ import annotations
 
@@ -14,6 +22,7 @@ import jax
 import numpy as np
 
 from repro.configs import registry as cfg_registry
+from repro.core import CheckpointManager, make_backend
 from repro.models import model as M
 from repro.serving.engine import Request, ServingEngine
 
@@ -27,34 +36,98 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=5)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="enable live-session checkpointing to this dir")
+    ap.add_argument("--backend", choices=("localfs", "sharded"),
+                    default="localfs")
+    ap.add_argument("--snapshot-every", type=int, default=4,
+                    help="snapshot cadence in engine steps (with "
+                         "--ckpt-dir)")
+    ap.add_argument("--resume", nargs="?", const="latest", default=None,
+                    metavar="STEP",
+                    help="restore live sessions from --ckpt-dir: "
+                         "'latest' (the bare flag) or a step number; "
+                         "--slots may differ from the checkpoint "
+                         "(elastic re-slotting)")
     args = ap.parse_args(argv)
 
+    # validate the cheap stuff before paying jax init + param build
+    resume_step = None
+    if args.resume is not None and args.resume != "latest":
+        try:
+            resume_step = int(args.resume)
+        except ValueError:
+            print(f"[serve] --resume: expected 'latest' or a step "
+                  f"number, got {args.resume!r}", file=sys.stderr)
+            return 2
+    if args.resume is not None and not args.ckpt_dir:
+        print("[serve] --resume needs --ckpt-dir", file=sys.stderr)
+        return 2
+
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(make_backend(args.backend, args.ckpt_dir),
+                                async_save=True)
+    step = resume_step
+    if args.resume is not None:
+        from repro.core.restore import restorable_steps
+        ok = restorable_steps(mgr.backend)
+        if not ok or (step is not None and step not in ok):
+            print(f"[serve] --resume: step "
+                  f"{'latest' if step is None else step} not restorable "
+                  f"in {args.ckpt_dir} (have {ok})", file=sys.stderr)
+            return 2
+        if step is None:
+            step = ok[-1]  # newest step with an intact chain
+        ckpt_arch = mgr.backend.get_manifest(step).get("job", {}).get("arch")
+        if ckpt_arch is not None and ckpt_arch != args.arch:
+            print(f"[serve] --resume: checkpoint was taken with arch "
+                  f"{ckpt_arch!r}, not {args.arch!r} — the params built "
+                  f"from --arch would not match the restored engine",
+                  file=sys.stderr)
+            return 2
+
+    # arguments are sound — now pay jax init + param construction
     if args.arch in cfg_registry.ARCH_IDS:
         cfg = cfg_registry.get_config(args.arch)
     else:
         cfg = cfg_registry.get_smoke_config(args.arch.removesuffix("-smoke"))
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
 
-    eng = ServingEngine(cfg, params, mesh, n_slots=args.slots,
-                        max_seq=args.max_seq)
-    rng = np.random.RandomState(args.seed)
-    reqs = [Request(rid=i,
-                    prompt=rng.randint(0, cfg.vocab_size,
-                                       size=args.prompt_len),
-                    max_new=args.max_new)
-            for i in range(args.requests)]
-    for r in reqs:
-        eng.submit(r)
+    if args.resume is not None:
+        eng = ServingEngine.restore(mgr, params, n_slots=args.slots,
+                                    step=step)
+        reqs = eng.live_requests()
+        inc = eng.incarnation
+        print(f"[serve] RESUMED at engine step {eng.steps} with "
+              f"{len(reqs)} live requests on {eng.n_slots} slots "
+              f"(materialize {inc.timings['materialize_s']:.2f}s, "
+              f"replay {inc.timings['replay_s']:.2f}s)")
+    else:
+        eng = ServingEngine.create(args.arch, params, (n_dev, 1),
+                                   n_slots=args.slots,
+                                   max_seq=args.max_seq, manager=mgr)
+        rng = np.random.RandomState(args.seed)
+        reqs = [Request(rid=i,
+                        prompt=rng.randint(0, cfg.vocab_size,
+                                           size=args.prompt_len),
+                        max_new=args.max_new)
+                for i in range(args.requests)]
+        for r in reqs:
+            eng.submit(r)
 
+    # tokens already generated before a crash don't count toward this
+    # process's throughput — only what the drain below produces does
+    already = sum(len(r.out) for r in reqs)
     t0 = time.monotonic()
-    eng.run_until_drained()
+    eng.run_until_drained(
+        snapshot_every=args.snapshot_every if mgr is not None else None)
     dt = time.monotonic() - t0
-    toks = sum(len(r.out) for r in reqs)
+    toks = sum(len(r.out) for r in reqs) - already
     print(f"[serve] {len(reqs)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s, {eng.steps} engine steps, "
-          f"{args.slots} slots)")
+          f"{eng.n_slots} slots)")
     for r in reqs:
         print(f"  rid={r.rid} out={r.out}")
     return 0

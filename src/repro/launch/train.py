@@ -7,7 +7,9 @@ or transparently resumes).
       --shape train_s32_b4 --steps 20 --ckpt-dir /tmp/job1 [--backend sharded]
 
 Re-running the identical command after a kill continues bitwise from the
-last committed checkpoint.
+last committed checkpoint. ``--resume [latest|STEP]`` makes the intent
+explicit: it *requires* a restorable checkpoint (and can pick a specific
+step), where the default behavior silently falls back to a cold start.
 """
 from __future__ import annotations
 
@@ -35,6 +37,11 @@ def main(argv=None) -> int:
     ap.add_argument("--data-mesh", type=int, default=0,
                     help="data axis size (0 = all local devices)")
     ap.add_argument("--model-mesh", type=int, default=1)
+    ap.add_argument("--resume", nargs="?", const="latest", default=None,
+                    metavar="STEP",
+                    help="resume from a checkpoint: 'latest' (the bare "
+                         "flag) or a step number; fails instead of "
+                         "cold-starting when none is restorable")
     args = ap.parse_args(argv)
 
     n_dev = len(jax.devices())
@@ -42,10 +49,36 @@ def main(argv=None) -> int:
     mgr = CheckpointManager(make_backend(args.backend, args.ckpt_dir),
                             async_save=True, keep_last=args.keep_last)
 
+    resume_step = None
+    if args.resume is not None and args.resume != "latest":
+        try:
+            resume_step = int(args.resume)
+        except ValueError:
+            print(f"[launch] --resume: expected 'latest' or a step "
+                  f"number, got {args.resume!r}", file=sys.stderr)
+            return 2
+    if args.resume is not None:
+        from repro.core.restore import restorable_steps
+        ok = restorable_steps(mgr.backend)
+        if not ok:
+            print(f"[launch] --resume: no restorable checkpoint in "
+                  f"{args.ckpt_dir}", file=sys.stderr)
+            return 2
+        if resume_step is not None and resume_step not in ok:
+            print(f"[launch] --resume: step {resume_step} not restorable "
+                  f"(have {ok})", file=sys.stderr)
+            return 2
+        if resume_step is None:
+            resume_step = ok[-1]  # newest step with an intact chain
+
     if mgr.backend.latest_step() is not None:
-        tr = Trainer.restore(mgr)
+        tr = Trainer.restore(mgr, step=resume_step)
+        inc = tr.incarnation
         print(f"[launch] RESUMED {args.arch} at step "
-              f"{int(tr.upper.get('step'))} from {args.ckpt_dir}")
+              f"{int(tr.upper.get('step'))} from {args.ckpt_dir} "
+              f"(materialize {inc.timings['materialize_s']:.2f}s, "
+              f"replay {inc.timings['replay_s']:.2f}s, "
+              f"rebind {inc.timings.get('rebind_s', 0.0):.2f}s)")
     else:
         job = TrainJob(arch=args.arch, shape_key=args.shape)
         tr = Trainer(job, (d, args.model_mesh), ("data", "model"),

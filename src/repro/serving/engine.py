@@ -1,14 +1,26 @@
 """Serving: sharded prefill/decode steps + a continuous-batching engine.
 
 The step builders are registered in the C/R function registry, so a
-serving process restores exactly like a trainer: fresh lower half, replay
-recompiles prefill/decode executables, CacheAlloc replay re-creates the
-(zeroed) cache, and — if the operator checkpointed live sessions — the
-cache contents re-materialize as an upper-half entry.
+serving process restores exactly like a trainer — through one
+``core.incarnation.Incarnation``: fresh lower half, replay recompiles
+the decode executable and re-creates the (zeroed) cache, then the
+*complete* session state rebinds: cache contents, request queue,
+per-slot in-flight requests (prompt, generated tokens, budget), slot
+positions and pending tokens. This is the paper's §IV demo — the artist
+reopens Maya and the scene is still there — for inference sessions.
+
+Restore is *elastic* in the serving dimension: a checkpoint taken on an
+N-slot engine lands on an M-slot engine (re-slotting). Each live
+session's KV slice is rebuilt by replaying its full token history
+(prompt + tokens generated so far) through the prefill path into its
+new slot — the serving analogue of restoring a trainer onto a different
+mesh.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
+import re
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -24,7 +36,9 @@ from repro.parallel.sharding import ParallelPlan, tree_specs
 from repro.parallel.planner import make_plan
 from repro.parallel import context as pctx
 from repro.serving.kv_cache import cache_shardings, abstract_cache
-from repro.core.split_state import register_step_fn
+from repro.core.oplog import CacheAlloc, Compile
+from repro.core.split_state import (LowerHalf, UpperHalf, fill_like,
+                                    register_step_fn, tree_from_paths)
 from repro.train.step import make_call_options, ContextualJit
 
 
@@ -36,7 +50,12 @@ def serve_param_shardings(cfg: ModelConfig, plan: ParallelPlan, mesh):
 
 
 def jit_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh,
-                plan: Optional[ParallelPlan] = None):
+                plan: Optional[ParallelPlan] = None,
+                cache_len: Optional[int] = None):
+    """``cache_len``: the actual cache sequence capacity when it differs
+    from the prompt window (the engine prefills a ``shape.seq_len``-wide
+    token bucket into a ``max_seq``-long cache) — sharding divisibility
+    must be judged on the real cache geometry, not the bucket's."""
     plan = plan or make_plan(cfg, shape, mesh)
     opts = make_call_options(plan, mesh)
 
@@ -46,7 +65,7 @@ def jit_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh,
     pshard = serve_param_shardings(cfg, plan, mesh)
     cshard = cache_shardings(cfg, plan, mesh,
                              abstract_cache(cfg, shape.global_batch,
-                                            shape.seq_len))
+                                            cache_len or shape.seq_len))
     b = plan.batch_axes[0] if len(plan.batch_axes) == 1 \
         else tuple(plan.batch_axes)
     tshard = NamedSharding(mesh, PartitionSpec(b, None))
@@ -152,31 +171,82 @@ class Request:
     done: bool = False
 
 
+def _request_tree(r: Request) -> Dict[str, np.ndarray]:
+    """A Request as a checkpointable pytree of arrays."""
+    return {"rid": np.int64(r.rid), "max_new": np.int64(r.max_new),
+            "prompt": np.asarray(r.prompt, np.int32),
+            "out": np.asarray(r.out, np.int32)}
+
+
+def _request_from_tree(t: Dict[str, Any]) -> Request:
+    return Request(rid=int(t["rid"]), max_new=int(t["max_new"]),
+                   prompt=np.asarray(t["prompt"], np.int32),
+                   out=[int(x) for x in np.asarray(t["out"]).ravel()])
+
+
+def _reslot_rewriter(n_old: int, n_new: int) -> Callable:
+    """Op-log rewrite for elastic re-slotting: the logged CacheAlloc and
+    decode Compile carry the old slot count; replay them at the new one
+    (same virtual ids — the vid/handle indirection is what makes the
+    rewrite invisible to everything above the table)."""
+    def rewrite(op):
+        if isinstance(op, CacheAlloc) and op.batch == n_old:
+            return dataclasses.replace(op, batch=n_new)
+        if isinstance(op, Compile) and op.fn_name == "decode_step":
+            return dataclasses.replace(op, shape_key=re.sub(
+                rf"_b{n_old}$", f"_b{n_new}", op.shape_key))
+        return op
+    return rewrite
+
+
 class ServingEngine:
     """Slot-based continuous batching over fixed-shape decode steps.
 
     Decode always runs the full slot batch (fixed shapes = no recompiles);
-    finished slots are refilled from the queue between steps. Prefill for
-    a new request runs single-request with right-aligned padding into its
-    slot (the batched-prefill variant is a benchmark knob).
+    finished slots are refilled from the queue between steps. Admission
+    rebuilds the slot's decode state from the request's full token
+    history — prompt plus any tokens already generated, so a request
+    resumed from a checkpoint re-enters mid-generation — through the
+    batched prefill path (size-bucketed, right-padded; attention-family
+    models) or a single-slot decode replay (recurrent families, where
+    padding would pollute the state).
     """
 
     def __init__(self, cfg: ModelConfig, params, mesh, n_slots: int,
                  max_seq: int, plan: Optional[ParallelPlan] = None,
-                 manager=None, lower=None):
+                 manager=None, lower=None, arch: Optional[str] = None,
+                 _adopt: Optional[Dict[str, Any]] = None):
         self.cfg = cfg
         self.params = params
-        shape = ShapeConfig("engine", max_seq, n_slots, "decode")
-        self.decode, dinfo = jit_decode_step(cfg, shape, mesh, plan)
-        self.plan = dinfo["plan"]
+        self.mesh = mesh
+        self.arch = arch
+        if _adopt is not None:
+            # runtime resources already exist (built or replayed through
+            # the logged lower half) — adopt instead of re-creating
+            self.decode = _adopt["decode"]
+            self.plan = getattr(self.decode, "plan", plan)
+            self.cache = _adopt["cache"]
+            self.vexec = _adopt.get("vexec")
+            self.vcache = _adopt.get("vcache")
+        else:
+            shape = ShapeConfig("engine", max_seq, n_slots, "decode")
+            self.decode, dinfo = jit_decode_step(cfg, shape, mesh, plan)
+            self.plan = dinfo["plan"]
+            self.cache = M.init_cache(cfg, n_slots, max_seq)
+            self.vexec = self.vcache = None
         self.n_slots = n_slots
         self.max_seq = max_seq
-        self.cache = M.init_cache(cfg, n_slots, max_seq)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int32)
         self.slot_tok = np.zeros((n_slots, 1), np.int32)
         self.queue: List[Request] = []
         self.steps = 0
+        # admission executables, built lazily: prefill jits per size
+        # bucket, and a batch-1 decode for recurrent-state replay
+        self._admit_prefill: Dict[int, Any] = {}
+        self._slot_decode = None
+        self._prefill_admission = (cfg.family not in ("ssm", "hybrid")
+                                   and not cfg.is_encoder_decoder)
         # optional live-session checkpointing (core.async_snapshot):
         # manager drains snapshots in the background, lower's op-log (if
         # the engine was built through the logged runtime) rides along so
@@ -184,34 +254,161 @@ class ServingEngine:
         self.manager = manager
         self.lower = lower
 
+    @classmethod
+    def create(cls, arch: str, params, mesh_shape,
+               mesh_axes=("data", "model"), *, n_slots: int, max_seq: int,
+               manager=None) -> "ServingEngine":
+        """Build an engine through the logged C/R runtime: MeshCreate +
+        decode Compile + CacheAlloc all flow through a LowerHalf, so a
+        snapshot of this engine carries the op-log a restore replays."""
+        lower = LowerHalf()
+        lower.mesh_create(mesh_shape, mesh_axes)
+        vexec = lower.compile_step("decode_step", arch,
+                                   f"decode_s{max_seq}_b{n_slots}")
+        vcache = lower.cache_alloc(arch, n_slots, max_seq)
+        cfg = _resolve_cfg(arch)
+        return cls(cfg, params, lower.mesh, n_slots=n_slots,
+                   max_seq=max_seq, manager=manager, lower=lower, arch=arch,
+                   _adopt={"decode": lower.executable(vexec),
+                           "cache": lower.cache(vcache),
+                           "vexec": vexec, "vcache": vcache})
+
     # --- live-session checkpointing ------------------------------------
 
-    def session_state(self):
-        """The engine's semantic (upper-half) state: cache contents plus
-        slot bookkeeping. Params are the trainer's job, not ours."""
-        from repro.core.split_state import UpperHalf
+    def session_state(self) -> UpperHalf:
+        """The engine's *complete* semantic (upper-half) state: cache
+        contents, slot bookkeeping (positions + pending tokens), every
+        in-flight request (prompt, generated tokens, budget, identity)
+        and the waiting queue. Params are the trainer's job, not ours."""
         up = UpperHalf()
         up.register("kv_cache", "cache", self.cache)
         up.register("sessions", "sessions", {
             "slot_pos": np.array(self.slot_pos),
             "slot_tok": np.array(self.slot_tok),
         })
+        sched: Dict[str, Dict[str, Any]] = {"queue": {}, "slots": {}}
+        for i, r in enumerate(self.queue):
+            sched["queue"][f"{i:06d}"] = _request_tree(r)
+        for s, r in enumerate(self.slot_req):
+            if r is not None:
+                sched["slots"][f"{s:06d}"] = _request_tree(r)
+        up.register("sched", "sched", sched)
         up.register("steps", "step", np.int64(self.steps))
         return up
 
-    def snapshot(self):
-        """Non-blocking snapshot of live sessions at an engine-step
-        boundary; decode keeps running while the pipeline encodes and
-        writes. Returns the SnapshotHandle (None if dropped under
-        "skip" backpressure)."""
+    def job_meta(self) -> Dict[str, Any]:
+        return {"kind": "serving", "arch": self.arch,
+                "n_slots": self.n_slots, "max_seq": self.max_seq}
+
+    def snapshot(self, block: bool = False):
+        """Snapshot of live sessions at an engine-step boundary;
+        non-blocking by default — decode keeps running while the
+        pipeline encodes and writes. Returns the SnapshotHandle (None
+        when blocking, or if dropped under "skip" backpressure)."""
         assert self.manager is not None, "construct with manager= to snapshot"
         from repro.core.oplog import OpLog
         log = self.lower.oplog if self.lower is not None else OpLog()
         return self.manager.save(self.steps, self.session_state(), log,
-                                 block=False,
-                                 job_meta={"kind": "serving",
-                                           "n_slots": self.n_slots,
-                                           "max_seq": self.max_seq})
+                                 block=block, job_meta=self.job_meta())
+
+    # --- restore (the Incarnation lifecycle, serving flavor) -----------
+
+    @classmethod
+    def restore(cls, manager, params, *, n_slots: Optional[int] = None,
+                step: Optional[int] = None, mesh=None, mesh_factory=None,
+                decode_workers: Optional[int] = None) -> "ServingEngine":
+        """Resume a serving process from a live-session checkpoint.
+
+        Same-geometry restore (``n_slots`` matches the checkpoint)
+        rebinds cache contents and slot state directly. A different
+        ``n_slots`` triggers **re-slotting**: the op-log replays with
+        CacheAlloc/Compile rewritten to the new slot count, and every
+        live session re-enters through admission, which rebuilds its KV
+        slice by replaying prompt + generated tokens through prefill —
+        the serving analogue of elastic multi-device restore.
+
+        ``mesh``/``mesh_factory`` override the logged topology (and are
+        required if the checkpoint came from an engine built outside
+        the logged runtime, whose op-log is empty)."""
+        from repro.core.incarnation import Incarnation
+        if mesh is not None and mesh_factory is None:
+            mesh_factory = lambda m=mesh: m
+        # peek at the manifest (cheap JSON) before materializing: on a
+        # re-slot restore the checkpoint's KV cache and slot bookkeeping
+        # are rebuilt from scratch, so their delta chains — the bulk of
+        # the payload — are skipped at decode, not decoded and dropped
+        step = manager.resolve_step(step)
+        job = manager.backend.get_manifest(step).get("job", {})
+        if job.get("kind") != "serving":
+            raise ValueError(f"not a serving checkpoint: {job!r}")
+        arch = job.get("arch")
+        if arch is None:
+            raise ValueError("checkpoint predates engine arch metadata; "
+                             "cannot rebuild the engine from it")
+        n_old, max_seq = int(job["n_slots"]), int(job["max_seq"])
+        n_new = int(n_slots) if n_slots is not None else n_old
+        reslot = n_new != n_old
+        inc = Incarnation(
+            manager, step=step, mesh_factory=mesh_factory,
+            decode_workers=decode_workers,
+            rewrite_op=_reslot_rewriter(n_old, n_new) if reslot else None,
+            skip_entries=("kv_cache", "sessions") if reslot else None)
+        inc.materialize()
+        lower = inc.build_lower()
+        cfg = _resolve_cfg(arch)
+        use_mesh = inc.mesh_or_none()
+        if use_mesh is None:
+            use_mesh = mesh
+        if use_mesh is None:
+            raise ValueError("op-log bound no mesh (engine was built "
+                             "outside the logged runtime); pass mesh=")
+        vexec = inc.last_compile("decode_step")
+        adopt = None
+        if vexec is not None:
+            vcache = inc.last_cache_alloc()
+            adopt = {"decode": lower.executable(vexec),
+                     "cache": (lower.cache(vcache) if vcache is not None
+                               else M.init_cache(cfg, n_new, max_seq)),
+                     "vexec": vexec, "vcache": vcache}
+        eng = cls(cfg, params, use_mesh, n_slots=n_new, max_seq=max_seq,
+                  manager=manager, lower=lower, arch=arch, _adopt=adopt)
+        eng.steps = int(inc.scalar("steps")) if inc.has_entry("steps") else 0
+
+        sched = (tree_from_paths(inc.entry_paths("sched"))
+                 if inc.has_entry("sched") else {})
+        slot_reqs = [(int(k), _request_from_tree(v))
+                     for k, v in sorted(sched.get("slots", {}).items())]
+        queue_reqs = [_request_from_tree(v)
+                      for _, v in sorted(sched.get("queue", {}).items())]
+
+        if not reslot:
+            host = fill_like(eng.cache, inc.entry_paths("kv_cache"))
+            eng.cache = jax.tree.map(
+                lambda t, v: jnp.asarray(np.asarray(v), dtype=t.dtype),
+                eng.cache, host)
+            sess = tree_from_paths(inc.entry_paths("sessions"))
+            eng.slot_pos = np.asarray(sess["slot_pos"], np.int32).copy()
+            eng.slot_tok = np.asarray(sess["slot_tok"],
+                                      np.int32).copy().reshape(n_new, 1)
+            for s, r in slot_reqs:
+                eng.slot_req[s] = r
+            eng.queue = queue_reqs
+        else:
+            # elastic re-slot: former in-flight sessions (slot order)
+            # lead the queue, then the waiting requests; admission
+            # replays each one's history into its new slot. Sessions
+            # beyond the new slot count wait their turn — nothing drops.
+            eng.queue = [r for _, r in slot_reqs] + queue_reqs
+            eng._admit()
+        inc.release()   # every entry is rebound or rebuilt; drop the
+        eng.incarnation = inc  # host payload, keep timings + manifest
+        return eng
+
+    def live_requests(self) -> List[Request]:
+        """In-flight requests (slot order) + the waiting queue."""
+        return [r for r in self.slot_req if r is not None] + list(self.queue)
+
+    # --- admission ------------------------------------------------------
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -219,27 +416,78 @@ class ServingEngine:
     def _admit(self) -> None:
         for s in range(self.n_slots):
             if self.slot_req[s] is None and self.queue:
-                req = self.queue.pop(0)
-                self.slot_req[s] = req
-                # "prefill" by teacher-forcing all but the last prompt
-                # token through decode steps (unit scale; batched prefill
-                # is exercised by jit_prefill separately). The last
-                # prompt token is left as the slot's pending token so the
-                # next engine step produces the first generated token.
-                for i, t in enumerate(req.prompt[:-1]):
-                    self._step_slot(s, int(t), i)
-                self.slot_tok[s, 0] = int(req.prompt[-1])
-                self.slot_pos[s] = len(req.prompt) - 1
+                self._bind_slot(s, self.queue.pop(0))
 
-    def _step_slot(self, s: int, token: int, pos: int) -> None:
-        toks = np.array(self.slot_tok)
-        toks[s, 0] = token
-        poss = np.array(self.slot_pos)
-        poss[s] = pos
-        logits, self.cache = self.decode(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(poss))
-        self._last_logits = np.asarray(jax.device_get(logits))
-        self.slot_tok = toks
+    def _bind_slot(self, s: int, req: Request) -> None:
+        """Admit ``req`` into slot ``s``, rebuilding the slot's decode
+        state from the request's full token history. The last history
+        token becomes the slot's pending token, so the next engine step
+        produces the request's next output token."""
+        seq = np.concatenate([np.asarray(req.prompt).ravel(),
+                              np.asarray(req.out).ravel()]).astype(np.int32)
+        hist = seq[:-1]
+        if len(hist):
+            if self._prefill_admission:
+                self._prefill_slot(s, hist)
+            else:
+                self._replay_slot(s, hist)
+        self.slot_req[s] = req
+        self.slot_tok[s, 0] = int(seq[-1])
+        self.slot_pos[s] = len(seq) - 1
+
+    def _prefill_slot(self, s: int, hist: np.ndarray) -> None:
+        """One batched prefill call instead of O(len) full-slot decodes:
+        the history is right-padded into a power-of-two bucket (few
+        compilations, reused across requests) and prefilled at batch 1
+        into a fresh single-slot cache, which then lands in slot ``s``.
+        Pad garbage beyond the history writes cache entries at positions
+        the causal mask hides until decode overwrites them (each decode
+        step rewrites its own position before attending)."""
+        width = max(8, 1 << (int(len(hist)) - 1).bit_length())
+        width = min(width, self.max_seq)
+        assert len(hist) <= width, (len(hist), self.max_seq)
+        fn = self._admit_prefill.get(width)
+        if fn is None:
+            shape = ShapeConfig(f"admit_s{width}_b1", width, 1, "prefill")
+            fn, _ = jit_prefill(self.cfg, shape, self.mesh,
+                                cache_len=self.max_seq)
+            self._admit_prefill[width] = fn
+        toks = np.zeros((1, width), np.int32)
+        toks[0, :len(hist)] = hist
+        one = M.init_cache(self.cfg, 1, self.max_seq)
+        _, one = fn(self.params, jnp.asarray(toks), one)
+        self._merge_slot(s, one)
+
+    def _replay_slot(self, s: int, hist: np.ndarray) -> None:
+        """Recurrent families (SSM/hybrid/enc-dec): state is
+        order-sensitive, so padding is off the table — replay the
+        history through a batch-1 decode into a fresh single-slot state
+        (one compile total, and no cross-slot pollution: the full-batch
+        teacher-forcing this replaces re-advanced every *other* live
+        slot's recurrent state once per history token)."""
+        if self._slot_decode is None:
+            shape = ShapeConfig(f"admit_s{self.max_seq}_b1",
+                                self.max_seq, 1, "decode")
+            self._slot_decode, _ = jit_decode_step(self.cfg, shape,
+                                                   self.mesh)
+        one = M.init_cache(self.cfg, 1, self.max_seq)
+        for i, t in enumerate(hist):
+            _, one = self._slot_decode(
+                self.params, one, jnp.asarray([[int(t)]], jnp.int32),
+                jnp.asarray([i], jnp.int32))
+        self._merge_slot(s, one)
+
+    def _merge_slot(self, s: int, one) -> None:
+        """Land a single-slot cache tree in slot ``s`` of the engine
+        cache. Batch is axis 1 on stacked-layer leaves (axis 0 only on
+        rank-1 leaves) — same layout rule as kv_cache.cache_shardings."""
+        def merge(full, sl):
+            full = jnp.asarray(full)
+            sl = jnp.asarray(sl, full.dtype)
+            if full.ndim >= 2:
+                return full.at[:, s:s + 1].set(sl)
+            return full.at[s:s + 1].set(sl)
+        self.cache = jax.tree.map(merge, self.cache, one)
 
     def step(self) -> int:
         """One engine iteration; returns #active slots."""

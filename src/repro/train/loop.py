@@ -26,9 +26,8 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs import registry as cfg_registry
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core import (CheckpointManager, LowerHalf, UpperHalf,
-                        fresh_lower_half, materialize_entry)
-from repro.core.restore import restore_scalar
+from repro.core import (CheckpointManager, Incarnation, LowerHalf,
+                        UpperHalf)
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.models import model as M
 from repro.optim import (AdamWConfig, ScheduleConfig, abstract_opt_state,
@@ -190,9 +189,17 @@ class Trainer:
     @classmethod
     def restore(cls, manager: CheckpointManager,
                 mesh_factory: Optional[Callable] = None,
-                step: Optional[int] = None) -> "Trainer":
-        restored = manager.restore(step)
-        jm = restored.manifest["job"]
+                step: Optional[int] = None,
+                decode_workers: Optional[int] = None) -> "Trainer":
+        """Resume through the Incarnation lifecycle: materialize the
+        delta chain (parallel leaf decode), fresh lower half + op-log
+        replay (recompile, reapply runtime ops), rebind the upper half
+        onto the — possibly different — mesh. Phase timings land on
+        ``trainer.incarnation.timings``."""
+        inc = Incarnation(manager, step=step, mesh_factory=mesh_factory,
+                          decode_workers=decode_workers)
+        inc.materialize()
+        jm = inc.job
         job = TrainJob(arch=jm["arch"], shape_key=jm["shape_key"],
                        init_seed=jm.get("init_seed", 0),
                        data_seed=jm.get("data_seed", 1234),
@@ -200,35 +207,27 @@ class Trainer:
                        if jm.get("plan_key") else None)
 
         # 1-2: fresh lower half + replay (recompile, reapply runtime ops)
-        lower = fresh_lower_half(restored, mesh_factory=mesh_factory)
-        # find the train executable vid (last Compile of train_step)
-        from repro.core.oplog import Compile
-        vexec = None
-        for op in lower.oplog.ops:
-            if isinstance(op, Compile) and op.fn_name == "train_step":
-                vexec = op.vexec
+        lower = inc.build_lower()
+        vexec = inc.last_compile("train_step")
         assert vexec is not None, "no train_step Compile in the log"
 
         t = cls(job, None, None, manager=manager, _restored=(lower, vexec))
 
         # 3: rematerialize the upper half on the (new) mesh
-        cfg, plan, mesh = t.cfg, t.plan, lower.mesh
-        ab_params = M.init_abstract(cfg)
-        logical = M.logical_specs(cfg)
-        params = materialize_entry(restored, "params", ab_params, plan,
-                                   mesh, logical)
+        ab_params = M.init_abstract(t.cfg)
+        logical = M.logical_specs(t.cfg)
+        params = inc.bind("params", ab_params, plan=t.plan, logical=logical)
         ab_opt = abstract_opt_state(ab_params, t.opt_cfg)
         olog = opt_logical_specs(logical, t.opt_cfg)
-        opt_state = materialize_entry(restored, "opt_state", ab_opt, plan,
-                                      mesh, olog)
+        opt_state = inc.bind("opt_state", ab_opt, plan=t.plan, logical=olog)
         t.upper.register("params", "params", params, logical)
         t.upper.register("opt_state", "opt_state", opt_state, olog)
-        t.upper.register("step", "step",
-                         np.int64(restore_scalar(restored, "step")))
+        t.upper.register("step", "step", np.int64(inc.scalar("step")))
         t.upper.register("data_cursor", "data_cursor",
-                         np.int64(restore_scalar(restored, "data_cursor")))
-        t.upper.register("rng_seed", "rng",
-                         np.int64(restore_scalar(restored, "rng_seed")))
+                         np.int64(inc.scalar("data_cursor")))
+        t.upper.register("rng_seed", "rng", np.int64(inc.scalar("rng_seed")))
+        inc.release()   # host payload rebound on device; don't hold the
+        t.incarnation = inc  # checkpoint's RAM for the life of the run
         return t
 
     # --- observability ---------------------------------------------------------

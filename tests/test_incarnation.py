@@ -1,0 +1,156 @@
+"""The Incarnation restore lifecycle: phase ordering, parallel chain
+materialization equivalence, cross-incarnation handle staleness, and
+restorable-step listing under GC'd delta bases."""
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointManager, HandleTable, Incarnation,
+                        LifecycleError, LocalFSBackend, OpLog,
+                        StaleHandleError, UpperHalf, restorable_steps,
+                        tree_from_paths)
+
+
+def _mk_upper(seed=0, n=20_000):
+    rng = np.random.RandomState(seed)
+    up = UpperHalf()
+    up.register("params", "params",
+                {"w": rng.randn(n).astype(np.float32),
+                 "b": rng.randn(64).astype(np.float32)})
+    up.register("step", "step", np.int64(seed))
+    return up
+
+
+# --- lifecycle ordering -----------------------------------------------------
+
+def test_phases_enforced_in_order(tmp_path):
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False)
+    mgr.save(1, _mk_upper(1), OpLog())
+    inc = Incarnation(mgr)
+    with pytest.raises(LifecycleError):
+        inc.build_lower()          # before materialize
+    with pytest.raises(LifecycleError):
+        inc.scalar("step")
+    inc.materialize()
+    with pytest.raises(LifecycleError):
+        inc.bind("params", {})     # before build_lower
+    inc.build_lower()
+    assert int(inc.scalar("step")) == 1
+    with pytest.raises(LifecycleError):
+        inc.materialize()          # single-use
+    with pytest.raises(LifecycleError):
+        inc.build_lower()
+
+
+def test_materialize_parallel_matches_serial(tmp_path):
+    """The decode worker pool is a latency optimization, not a format
+    change: leaves decode bit-identically at any worker count, across a
+    delta chain."""
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)),
+                            async_save=False, delta_base_interval=4)
+    up = _mk_upper(0, n=300_000)
+    for s in (1, 2, 3):
+        up.get("params")["w"][s::97] += 1.0
+        mgr.save(s, up, OpLog())
+    serial = mgr.restore(3, workers=1)
+    parallel = mgr.restore(3, workers=8)
+    for name in serial.entries:
+        assert set(serial.entries[name]) == set(parallel.entries[name])
+        for path, arr in serial.entries[name].items():
+            np.testing.assert_array_equal(arr, parallel.entries[name][path])
+    np.testing.assert_array_equal(serial.entries["params"]["['w']"],
+                                  up.get("params")["w"])
+
+
+# --- cross-incarnation staleness -------------------------------------------
+
+def test_stale_handle_after_new_incarnation():
+    """A vid from a previous incarnation must not silently resolve: the
+    translation table raises until replay rebinds it (paper §III)."""
+    table = HandleTable()
+    vid = table.create("exec", object())
+    assert table.translate(vid) is not None
+    table.new_incarnation()
+    with pytest.raises(StaleHandleError):
+        table.translate(vid)
+    assert not table.is_bound(vid)
+    # replay's rebind makes the same vid valid again
+    fresh = object()
+    table.bind(vid, fresh)
+    assert table.translate(vid) is fresh
+
+
+def test_lower_half_vids_stale_until_replayed(tmp_path):
+    """End-to-end: after a checkpointed runtime's log replays into a new
+    incarnation the old vids resolve to *new* objects; a vid whose op was
+    never replayed stays stale."""
+    from repro.core import LowerHalf
+    lower = LowerHalf()
+    lower.mesh_create((1, 1), ("data", "model"))
+    vmesh = lower.vmesh
+    gen0 = lower.handles.generation
+
+    lower.reset()   # new incarnation, nothing rebound yet
+    assert lower.handles.generation == gen0 + 1
+    with pytest.raises(StaleHandleError):
+        lower.handles.translate(vmesh)
+    assert not lower.handles.is_bound(vmesh)
+
+    lower.oplog.replay(lower)   # rebind: same vid, current generation
+    assert lower.handles.is_bound(vmesh)
+    assert lower.handles.translate(vmesh).axis_names == ("data", "model")
+
+
+# --- restorable steps under GC ---------------------------------------------
+
+def test_restorable_steps_excludes_gcd_base(tmp_path):
+    """A delta step whose base manifest was GC'd is not restorable and
+    must not be listed; steps with intact chains still are."""
+    be = LocalFSBackend(str(tmp_path))
+    mgr = CheckpointManager(be, async_save=False, delta_base_interval=2)
+    up = _mk_upper(0, n=50_000)
+    for s in (1, 2, 3, 4):   # 1 full, 2 delta(1), 3 full, 4 delta(3)
+        up.get("params")["w"][s::53] += 1.0
+        mgr.save(s, up, OpLog())
+    assert be.get_manifest(2)["base_step"] == 1
+    assert restorable_steps(be) == [1, 2, 3, 4]
+    be.delete_step(1)        # simulate an out-of-band GC of the base
+    assert restorable_steps(be) == [3, 4]
+
+
+def test_restorable_steps_single_manifest_read_each(tmp_path):
+    """The memoized listing reads each manifest once — O(n), not
+    O(n * chain length)."""
+    be = LocalFSBackend(str(tmp_path))
+    mgr = CheckpointManager(be, async_save=False, delta_base_interval=100)
+    up = _mk_upper(0, n=4_096)
+    for s in range(1, 9):    # one long chain: 1 full, 2..8 deltas
+        up.get("params")["w"][s::31] += 1.0
+        mgr.save(s, up, OpLog())
+    reads = []
+    orig = be.get_manifest
+    be.get_manifest = lambda s: (reads.append(s), orig(s))[1]
+    assert restorable_steps(be) == list(range(1, 9))
+    assert sorted(reads) == list(range(1, 9)), reads
+
+
+# --- path-tree reconstruction ----------------------------------------------
+
+def test_tree_from_paths_roundtrip():
+    from repro.core.split_state import flatten_with_paths
+    tree = {"queue": {"000000": {"rid": np.int64(7),
+                                 "prompt": np.arange(4, dtype=np.int32)},
+                      "000001": {"rid": np.int64(9),
+                                 "prompt": np.arange(2, dtype=np.int32)}},
+            "slots": {}}
+    by_path = dict(flatten_with_paths(tree))
+    back = tree_from_paths(by_path)
+    assert back["queue"]["000000"]["rid"] == 7
+    np.testing.assert_array_equal(back["queue"]["000001"]["prompt"],
+                                  np.arange(2, dtype=np.int32))
+    # bare-leaf path
+    assert tree_from_paths({"": np.int64(3)}) == 3
+    # keystr repr-quotes keys containing a single quote with double
+    # quotes; both quoting forms must round-trip
+    tricky = {"it's": {"a 'key'": np.int64(1)}}
+    back = tree_from_paths(dict(flatten_with_paths(tricky)))
+    assert back["it's"]["a 'key'"] == 1
