@@ -1,0 +1,195 @@
+"""Dirty-chunk capture gate: snapshot cost must scale with what changed,
+not with model size.
+
+Scenario (the typical adjacent-step training delta the ISSUE names): a
+model of many layer leaves where each step touches ONE layer plus a few
+scattered rows of an embedding table — <=10% of all chunks dirty. The
+dense format-2 path pays a full device->host copy of every leaf on the
+caller thread and re-XORs full buffers on the encode thread; the sparse
+path (fingerprint dirty detection + dirty-chunk-only transfer, manifest
+format 3) must cut BOTH the caller-thread capture stall and the bytes
+the encoder processes to <=50% of dense — and, hard CI gate, move
+strictly fewer capture bytes. A format-2 checkpoint written by the dense
+path must still restore through the Incarnation lifecycle, bit-identical
+to the sparse run's final state.
+
+CLI:
+  PYTHONPATH=src:. python benchmarks/capture_stall.py \
+      [--smoke] [--check] [--json BENCH_capture.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import statistics
+import tempfile
+
+import numpy as np
+
+from repro.core import CheckpointManager, Incarnation, LocalFSBackend, OpLog, UpperHalf
+
+# layers x layer_bytes (jax leaves, one touched per step) + embed_bytes
+# (numpy leaf, chunk-sparse in-place updates), chunk size, chained steps
+SIZES = {
+    "full": dict(layers=32, layer_elems=1 << 20, embed_elems=1 << 24,
+                 chunk_bytes=256 * 1024, steps=8),
+    "smoke": dict(layers=32, layer_elems=1 << 19, embed_elems=1 << 20,
+                  chunk_bytes=64 * 1024, steps=8),
+}
+
+
+def _scenario(cfg, sparse: bool, root: str):
+    """Run the update/snapshot sequence; returns per-step stall samples,
+    byte counters (chained steps only) and the final live state."""
+    import jax.numpy as jnp
+
+    rng = np.random.RandomState(0)
+    layers = [jnp.asarray(rng.randn(cfg["layer_elems"]).astype(np.float32))
+              for _ in range(cfg["layers"])]
+    embed = rng.randn(cfg["embed_elems"]).astype(np.float32)
+    chunk_elems = cfg["chunk_bytes"] // 4
+    n_embed_chunks = embed.nbytes // cfg["chunk_bytes"]
+
+    mgr = CheckpointManager(
+        LocalFSBackend(root), async_save=False,
+        delta_base_interval=cfg["steps"] + 2,
+        sparse_capture=sparse,
+        sparse_chunk_bytes=cfg["chunk_bytes"],
+        sparse_min_bytes=2 * cfg["chunk_bytes"])
+    up = UpperHalf()
+    up.register("params", "params",
+                {f"layer_{i}": w for i, w in enumerate(layers)})
+    up.register("embed", "params", {"table": embed})
+    up.register("step", "step", np.int64(0))
+    mgr.save(1, up, OpLog())
+
+    base = dict(mgr.stats)
+    stalls = []
+    for s in range(2, cfg["steps"] + 2):
+        # one layer gets a full functional update (a fresh jax array);
+        # every other layer stays the SAME immutable array object
+        i = (s - 1) % cfg["layers"]
+        layers[i] = jnp.asarray(
+            np.asarray(layers[i]) + rng.randn(cfg["layer_elems"])
+            .astype(np.float32) * 0.01)
+        up.update("params",
+                  {f"layer_{j}": w for j, w in enumerate(layers)})
+        # ~5% of embedding chunks get scattered row updates
+        for c in rng.choice(n_embed_chunks, max(1, n_embed_chunks // 20),
+                            replace=False):
+            off = int(c) * chunk_elems
+            embed[off:off + 16] += 1.0
+        up.update("step", np.int64(s))
+        t0 = mgr.stats["capture_seconds"]
+        mgr.save(s, up, OpLog())
+        stalls.append(mgr.stats["capture_seconds"] - t0)
+
+    counters = {k: mgr.stats[k] - base[k]
+                for k in ("capture_bytes", "bytes_encoded",
+                          "bytes_written", "dirty_chunks", "clean_chunks",
+                          "identity_skips")}
+    final = {f"layer_{i}": np.asarray(w) for i, w in enumerate(layers)}
+    final["embed"] = embed.copy()
+    return mgr, stalls, counters, final
+
+
+def _restore_through_incarnation(mgr, step, final):
+    """The acceptance check's restore path: materialize the chain via
+    Incarnation and compare bit-for-bit against the live state."""
+    inc = Incarnation(mgr, step=step)
+    state = inc.materialize()
+    inc.build_lower()  # empty op-log: fresh hardware-free lower half
+    for i in range(len(final) - 1):
+        np.testing.assert_array_equal(
+            state.entries["params"][f"['layer_{i}']"], final[f"layer_{i}"])
+    np.testing.assert_array_equal(state.entries["embed"]["['table']"],
+                                  final["embed"])
+    assert int(inc.scalar("step")) == step
+    return state.manifest["format"]
+
+
+def run(smoke: bool = False) -> list:
+    cfg = SIZES["smoke" if smoke else "full"]
+    rows = []
+    res = {}
+    for sparse in (False, True):
+        root = tempfile.mkdtemp()
+        try:
+            mgr, stalls, counters, final = _scenario(cfg, sparse, root)
+            last = cfg["steps"] + 1
+            fmt = _restore_through_incarnation(mgr, last, final)
+            assert fmt == (3 if sparse else 2), fmt
+            res[sparse] = (statistics.median(stalls), counters, final)
+            mode = "sparse" if sparse else "dense"
+            rows.append((f"capture_stall/{mode}/stall",
+                         statistics.median(stalls) * 1e6,
+                         f"steps={cfg['steps']}"))
+            for k in ("capture_bytes", "bytes_encoded", "bytes_written"):
+                rows.append((f"capture_stall/{mode}/{k}", counters[k],
+                             f"per_step={counters[k] // cfg['steps']}"))
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+    sd, dd = res[True], res[False]
+    total_chunks = sd[1]["dirty_chunks"] + sd[1]["clean_chunks"]
+    rows.append(("capture_stall/sparse/dirty_fraction",
+                 1e6 * sd[1]["dirty_chunks"] / max(1, total_chunks),
+                 f"dirty={sd[1]['dirty_chunks']}/{total_chunks}"))
+    rows.append(("capture_stall/ratio/stall",
+                 1e6 * sd[0] / dd[0], "sparse/dense"))
+    for k in ("capture_bytes", "bytes_encoded"):
+        rows.append((f"capture_stall/ratio/{k}",
+                     1e6 * sd[1][k] / dd[1][k], "sparse/dense"))
+    # the two paths must capture the identical state sequence
+    for key in sd[2]:
+        np.testing.assert_array_equal(sd[2][key], dd[2][key])
+    return rows
+
+
+def check(rows: list) -> None:
+    """The gate. Hard CI failure if dirty-capture bytes >= dense-capture
+    bytes; acceptance additionally wants stall and encoded bytes <=50%
+    of dense at <=10% dirty chunks, and the format-2 restore (asserted
+    inside run())."""
+    by = {n: v for n, v, _ in rows}
+    failures = []
+    dirty_frac = by["capture_stall/sparse/dirty_fraction"] / 1e6
+    if dirty_frac > 0.10:
+        failures.append(f"scenario not sparse enough: {dirty_frac:.1%} "
+                        "chunks dirty (> 10%)")
+    if by["capture_stall/sparse/capture_bytes"] >= \
+            by["capture_stall/dense/capture_bytes"]:
+        failures.append("dirty-capture bytes >= dense-capture bytes")
+    for k, lim in (("capture_bytes", 0.5), ("bytes_encoded", 0.5),
+                   ("stall", 0.5)):
+        r = by[f"capture_stall/ratio/{k}"] / 1e6
+        if r > lim:
+            failures.append(f"sparse/dense {k} ratio {r:.2f} > {lim}")
+    if failures:
+        raise SystemExit("capture-stall gate FAILED: " + "; ".join(failures))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes (CI regression gate)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless sparse capture beats dense "
+                         "(bytes strictly; stall/encoded <= 50%%)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (CI artifact)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_or_bytes,derived")
+    for n, v, derived in rows:
+        print(f"{n},{v:.1f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "value": v, "derived": d}
+                       for n, v, d in rows], f, indent=2)
+    if args.check:
+        check(rows)
+
+
+if __name__ == "__main__":
+    main()

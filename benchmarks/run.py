@@ -6,6 +6,8 @@
   ckpt_codec_bench— DESIGN §4.5: delta + int8 checkpoint payloads
   async_snapshot  — step-time overhead of sync vs async (pipelined)
                     snapshots; the <30%-of-sync acceptance gate
+  capture_stall   — dirty-chunk capture vs dense: stall + bytes must
+                    scale with the change rate (<=50%-of-dense gate)
   roofline_table  — §Roofline: aggregated dry-run terms (reads
                     benchmarks/results/dryrun; run repro.launch.dryrun
                     first — missing cells simply produce no rows)
@@ -17,15 +19,16 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (async_snapshot_bench, ckpt_codec_bench,
-                            oplog_bench, overhead, restart_speed,
-                            roofline_table)
+    from benchmarks import (async_snapshot_bench, capture_stall,
+                            ckpt_codec_bench, oplog_bench, overhead,
+                            restart_speed, roofline_table)
     suites = {
         "restart_speed": restart_speed.run,
         "overhead": overhead.run,
         "oplog": oplog_bench.run,
         "ckpt_codec": ckpt_codec_bench.run,
         "async_snapshot": async_snapshot_bench.run,
+        "capture_stall": capture_stall.run,
         "roofline": roofline_table.run,
     }
     want = sys.argv[1:] or list(suites)

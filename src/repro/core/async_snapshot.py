@@ -35,13 +35,31 @@ the ones between store XOR deltas whose manifest records ``base_step``.
 ``materialize_manifest_chain`` walks base links back to the full base and
 re-applies deltas forward. GC keeps the transitive base closure of every
 retained manifest, so a kept checkpoint is always restorable.
+
+Sparse (dirty-chunk) capture: with chaining on, capture no longer pays a
+full device->host copy of every leaf. Each leaf's previous-snapshot
+fingerprints (per-chunk hashes, device-resident on TPU via the
+kernels/ckpt_codec Pallas fingerprint kernel, host segment-sums
+otherwise) are compared against the current value; only the chunks whose
+fingerprint changed are gather-compacted and transferred — one
+device->host hop per leaf, sized by what changed. Immutable jax leaves
+that are literally the same Array object as last capture (common for
+frozen params and serving weights) are skipped without reading a byte.
+The encode thread then XORs only those dirty chunks against the pinned
+previous-snapshot host mirror (``encode_leaf_sparse``, manifest format
+3) and patches the mirror in place, so exactly one full host copy stays
+alive. Capture stall AND encode work scale with the per-step change
+rate, not the model size. Snapshots are assumed to be requested from one
+caller thread (fingerprint state is advanced at capture time).
 """
 from __future__ import annotations
 
 import threading
 import time
+import weakref
 from concurrent.futures import Future, ThreadPoolExecutor
-from dataclasses import dataclass
+from concurrent.futures import TimeoutError as _FuturesTimeout
+from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -50,12 +68,156 @@ from repro.core.backends.base import CheckpointBackend
 from repro.core import delta as deltamod
 from repro.core.oplog import OpLog
 from repro.core.split_state import UpperHalf, flatten_with_paths
+from repro.kernels.ckpt_codec.ref import FP_CHUNK_BYTES, FP_SEG_BYTES
 
-MANIFEST_FORMAT = 2
+MANIFEST_FORMAT = 2         # dense manifests (no sparse leaves)
+SPARSE_MANIFEST_FORMAT = 3  # at least one dirty-chunk (sparse) leaf
 
 # bound on blob bytes queued to the writer pool per snapshot; keeps the
 # encode thread from racing ahead of a slow backend unboundedly
 MAX_PENDING_WRITES = 32
+
+
+# ---------------------------------------------------------------------------
+# sparse capture machinery
+# ---------------------------------------------------------------------------
+
+_BACKEND: Optional[str] = None
+
+
+def _backend() -> str:
+    global _BACKEND
+    if _BACKEND is None:
+        try:
+            import jax
+            _BACKEND = jax.default_backend()
+        except Exception:  # pragma: no cover
+            _BACKEND = "cpu"
+    return _BACKEND
+
+
+def _tpu_attached() -> bool:
+    return _backend() == "tpu"
+
+
+@dataclass
+class _LeafFP:
+    """Per-leaf fingerprint state from the last capture: the baseline
+    the next capture's dirty detection compares against. ``fp`` stays
+    device-resident on TPU (i32 [n_chunks, 2] from the Pallas kernel)
+    and is a host uint64 segment-sum array otherwise. ``wref`` is an
+    identity token: a jax Array is immutable, so the same object seen
+    again means the leaf is byte-identical — skipped without a read."""
+    impl: str                 # "tpu" | "host"
+    chunk_bytes: int
+    shape: Tuple[int, ...]
+    dtype: str
+    nbytes: int
+    fp: Any
+    wref: Optional[weakref.ref] = None
+
+
+@dataclass
+class _SparseLeaf:
+    """Capture product for one dirty-chunk leaf: the compacted dirty
+    payload plus enough geometry for the encode thread to XOR it against
+    the previous snapshot's host mirror."""
+    shape: Tuple[int, ...]
+    dtype: str
+    nbytes: int
+    chunk_bytes: int
+    n_chunks: int
+    dirty_idx: np.ndarray                 # [k] int64
+    dirty_bytes: Optional[np.ndarray]     # [k, chunk_bytes] u8, tail padded
+    base_step: int
+
+
+@dataclass
+class _SparseCtx:
+    """Everything the capture needs for dirty detection this snapshot.
+    ``fp`` is the pipeline's fingerprint store — touched only by the
+    caller thread (snapshots are caller-serial)."""
+    fp: Dict[Tuple[str, str], _LeafFP]
+    chain: bool               # will this snapshot be a chain link?
+    base_step: Optional[int]
+    chunk_bytes: int
+    min_bytes: int
+    codec_by_kind: Dict[str, str]
+    pool: Optional[ThreadPoolExecutor]
+    workers: int
+    seen: set = field(default_factory=set)
+
+    def eligible(self, v, codec: Optional[str]) -> bool:
+        import jax
+        if not isinstance(v, (np.ndarray, jax.Array)):
+            return False
+        if deltamod.codec_applicable(v, codec):
+            return False  # lossy-codec leaves never chain (see encode_leaf)
+        return v.nbytes >= self.min_bytes
+
+    def _fingerprint(self, v, host_bytes: Optional[np.ndarray]):
+        """-> (impl, fp, wref). Reads the leaf exactly once: on device
+        through the Pallas kernel when a TPU is attached, else one
+        threaded SIMD pass over the host bytes."""
+        import jax
+        is_jax = isinstance(v, jax.Array)
+        if _tpu_attached() and is_jax and len(v.devices()) == 1:
+            # single-device leaves only: a sharded array would be
+            # replicated by the kernel call — host path handles those
+            from repro.kernels.ckpt_codec import ops
+            return ("tpu", ops.chunk_fingerprints(v, self.chunk_bytes),
+                    weakref.ref(v))
+        if host_bytes is None:
+            host_bytes = _leaf_bytes(v)
+        fp = _fp_host_threaded(host_bytes, self.chunk_bytes,
+                               self.pool, self.workers)
+        return "host", fp, (weakref.ref(v) if is_jax else None)
+
+    def record(self, name: str, path: str, v,
+               host_bytes: Optional[np.ndarray] = None) -> None:
+        """Refresh the fingerprint baseline after a dense capture."""
+        impl, fp, wref = self._fingerprint(v, host_bytes)
+        self.fp[(name, path)] = _LeafFP(
+            impl=impl, chunk_bytes=self.chunk_bytes,
+            shape=tuple(v.shape), dtype=str(v.dtype), nbytes=v.nbytes,
+            fp=fp, wref=wref)
+
+    def prune(self) -> None:
+        """Drop baselines for leaves absent from this capture, so a leaf
+        that vanishes and later reappears can't match a stale baseline
+        against a mirror that no longer holds it."""
+        for key in [k for k in self.fp if k not in self.seen]:
+            del self.fp[key]
+
+
+def _leaf_bytes(v) -> np.ndarray:
+    import jax
+    host = np.asarray(jax.device_get(v))
+    return np.ascontiguousarray(host).reshape(-1).view(np.uint8)
+
+
+# below this leaf size the executor handoff + GIL wakeups cost more
+# than the single SIMD reduction pass they would split
+_FP_THREAD_MIN_BYTES = 32 << 20
+
+
+def _fp_host_threaded(buf: np.ndarray, chunk_bytes: int,
+                      pool: Optional[ThreadPoolExecutor],
+                      workers: int) -> np.ndarray:
+    """fingerprint_host fanned out over chunk-aligned ranges — numpy
+    releases the GIL inside the reductions, so for leaves large enough
+    to amortize the handoff the read pass scales with cores and
+    undercuts the full copy the dense path would pay."""
+    from repro.kernels.ckpt_codec.ref import fingerprint_host
+    n = buf.nbytes
+    if pool is None or workers <= 1 or n < _FP_THREAD_MIN_BYTES:
+        return fingerprint_host(buf, chunk_bytes)
+    n_chunks = -(-n // chunk_bytes)
+    per = -(-n_chunks // workers) * chunk_bytes
+    ranges = [(lo, min(n, lo + per)) for lo in range(0, n, per)]
+    parts = pool.map(
+        lambda r: fingerprint_host(buf[r[0]:r[1]], chunk_bytes), ranges)
+    return np.vstack(list(parts))
 
 
 class _StagingSlot:
@@ -65,34 +227,114 @@ class _StagingSlot:
         self.buffers: Dict[str, Dict[str, np.ndarray]] = {}
         self.busy = False
 
-    def capture(self, upper: UpperHalf) -> Dict[str, Dict[str, np.ndarray]]:
+    def capture(self, upper: UpperHalf, ctx: Optional[_SparseCtx] = None,
+                ) -> Tuple[Dict[str, Dict[str, Any]], Dict[str, int]]:
         """Copy-on-snapshot: device→host. On a real accelerator,
         ``device_get`` already materializes a fresh private host buffer —
         storing it directly avoids a second full memcpy on the only
         stall the caller pays. Host-resident leaves (numpy arrays,
         scalars — and everything on the CPU backend, where ``device_get``
         may alias a donatable buffer) are copied into this slot's
-        preallocated pool instead."""
+        preallocated pool instead.
+
+        With a sparse context, eligible leaves take the dirty-chunk
+        path instead of a full copy (``_try_sparse``); everything else
+        falls through to the dense copy and refreshes its fingerprint
+        baseline for the next capture."""
         import jax
         accel = jax.default_backend() != "cpu"
-        out: Dict[str, Dict[str, np.ndarray]] = {}
+        out: Dict[str, Dict[str, Any]] = {}
+        st = {"capture_bytes": 0, "dirty_chunks": 0, "clean_chunks": 0,
+              "identity_skips": 0, "sparse_leaves": 0}
         for name, e in upper.items():
             pool = self.buffers.setdefault(name, {})
-            taken: Dict[str, np.ndarray] = {}
+            taken: Dict[str, Any] = {}
+            codec = ctx.codec_by_kind.get(e.kind) if ctx else None
             for path, v in flatten_with_paths(e.tree):
+                elig = ctx is not None and ctx.eligible(v, codec)
+                if elig:
+                    ctx.seen.add((name, path))
+                    sp = self._try_sparse(name, path, v, ctx, st)
+                    if sp is not None:
+                        taken[path] = sp
+                        continue
                 host = jax.device_get(v)
                 if accel and host is not v and not isinstance(v, np.ndarray):
-                    taken[path] = np.asarray(host)  # already a private copy
-                    continue
-                a = np.asarray(host)
-                buf = pool.get(path)
-                if buf is None or buf.shape != a.shape or buf.dtype != a.dtype:
-                    buf = np.empty(a.shape, a.dtype)
-                    pool[path] = buf
-                np.copyto(buf, a)
-                taken[path] = buf
+                    a = np.asarray(host)  # already a private copy
+                else:
+                    a = np.asarray(host)
+                    buf = pool.get(path)
+                    if buf is None or buf.shape != a.shape \
+                            or buf.dtype != a.dtype:
+                        buf = np.empty(a.shape, a.dtype)
+                        pool[path] = buf
+                    np.copyto(buf, a)
+                    a = buf
+                taken[path] = a
+                st["capture_bytes"] += a.nbytes
+                if elig:
+                    # fingerprint the *staged* copy: for an in-place-
+                    # mutated numpy leaf only the staged bytes are
+                    # guaranteed to be this snapshot's
+                    ctx.record(name, path, v,
+                               host_bytes=np.ascontiguousarray(a)
+                               .reshape(-1).view(np.uint8))
             out[name] = taken
-        return out
+        if ctx is not None:
+            ctx.prune()
+        return out, st
+
+    def _try_sparse(self, name: str, path: str, v, ctx: _SparseCtx,
+                    st: Dict[str, int]) -> Optional[_SparseLeaf]:
+        """Dirty-chunk capture for one leaf; None -> take the dense path
+        (no baseline yet, geometry changed, or not a chain snapshot)."""
+        fpe = ctx.fp.get((name, path))
+        if (not ctx.chain or fpe is None
+                or fpe.chunk_bytes != ctx.chunk_bytes
+                or fpe.shape != tuple(v.shape) or fpe.dtype != str(v.dtype)):
+            return None
+        cb = ctx.chunk_bytes
+        n_chunks = -(-v.nbytes // cb)
+        common = dict(shape=tuple(v.shape), dtype=str(v.dtype),
+                      nbytes=v.nbytes, chunk_bytes=cb, n_chunks=n_chunks,
+                      base_step=ctx.base_step)
+        if fpe.wref is not None and fpe.wref() is v:
+            # same immutable Array object -> byte-identical, zero reads
+            st["identity_skips"] += 1
+            st["sparse_leaves"] += 1
+            st["clean_chunks"] += n_chunks
+            return _SparseLeaf(dirty_idx=np.empty(0, np.int64),
+                               dirty_bytes=None, **common)
+        import jax
+        if fpe.impl == "tpu" and _tpu_attached() \
+                and isinstance(v, jax.Array) and len(v.devices()) == 1:
+            from repro.kernels.ckpt_codec import ops
+            fp_new, idx, compact = ops.dirty_chunk_capture(v, fpe.fp, cb)
+            wref = weakref.ref(v)
+        elif fpe.impl == "host":
+            buf = _leaf_bytes(v)
+            fp_new = _fp_host_threaded(buf, cb, ctx.pool, ctx.workers)
+            idx = np.nonzero(np.any(fp_new != fpe.fp, axis=1))[0]
+            compact = None
+            if idx.size:
+                compact = np.empty((idx.size, cb), np.uint8)
+                for j, i in enumerate(idx):
+                    off = int(i) * cb
+                    ln = min(cb, v.nbytes - off)
+                    compact[j, :ln] = buf[off:off + ln]
+                    compact[j, ln:] = 0
+            wref = weakref.ref(v) if isinstance(v, jax.Array) else None
+        else:
+            return None  # baseline impl doesn't match this leaf anymore
+        ctx.fp[(name, path)] = _LeafFP(
+            impl=fpe.impl, chunk_bytes=cb, shape=tuple(v.shape),
+            dtype=str(v.dtype), nbytes=v.nbytes, fp=fp_new, wref=wref)
+        st["sparse_leaves"] += 1
+        st["dirty_chunks"] += int(idx.size)
+        st["clean_chunks"] += n_chunks - int(idx.size)
+        st["capture_bytes"] += int(idx.size) * cb
+        return _SparseLeaf(dirty_idx=np.asarray(idx, np.int64),
+                           dirty_bytes=compact, **common)
 
 
 @dataclass
@@ -106,6 +348,7 @@ class _Captured:
     log_json: Any
     job_meta: Dict[str, Any]
     capture_seconds: float
+    sparse_committed: bool = False  # set by encode: mirror was patched
 
 
 class SnapshotHandle:
@@ -120,8 +363,21 @@ class SnapshotHandle:
         return self._future.done()
 
     def result(self, timeout: Optional[float] = None) -> Dict[str, Any]:
-        """Block until committed; returns the manifest."""
-        return self._future.result(timeout)
+        """Block until committed; returns the manifest. Raises the
+        builtin ``TimeoutError`` when the encode thread hasn't committed
+        within ``timeout`` — never a partial result. (On Python < 3.11
+        ``concurrent.futures.TimeoutError`` is a distinct type that a
+        caller's ``except TimeoutError`` would silently miss.)"""
+        try:
+            return self._future.result(timeout)
+        except _FuturesTimeout:
+            if self._future.done():
+                # the snapshot itself failed with a TimeoutError (e.g. a
+                # storage timeout) — that is the real cause, not us
+                raise
+            raise TimeoutError(
+                f"snapshot for step {self.step} not committed within "
+                f"{timeout}s") from None
 
     # Future-compatible alias so legacy callers treating save()'s return
     # value as a concurrent.futures.Future keep working
@@ -144,6 +400,9 @@ class AsyncSnapshotter:
         keep_last: Optional[int] = None,
         prune_oplog: bool = True,
         depth: Optional[int] = None,
+        sparse_capture: bool = True,
+        sparse_chunk_bytes: int = FP_CHUNK_BYTES,
+        sparse_min_bytes: Optional[int] = None,
     ) -> None:
         assert backpressure in ("block", "skip"), backpressure
         assert delta_base_interval >= 1
@@ -168,9 +427,45 @@ class AsyncSnapshotter:
         self._prev: Optional[Tuple[int, Dict[str, Dict[str, np.ndarray]],
                                    _StagingSlot]] = None
         self._chain_len = 0
+        # dirty-chunk capture state (caller thread; see module docstring)
+        self.sparse_capture = sparse_capture and delta_base_interval > 1
+        if self.sparse_capture:
+            cb = sparse_chunk_bytes
+            # TPU kernel needs whole i32 lane rows (4*BLOCK); the host
+            # fingerprint needs chunks to be whole segments — fail at
+            # construction, not deep inside the first chained save
+            if cb <= 0 or cb % 1024 or (cb > FP_SEG_BYTES
+                                        and cb % FP_SEG_BYTES):
+                raise ValueError(
+                    f"sparse_chunk_bytes={cb} must be a positive multiple "
+                    f"of 1024, and of {FP_SEG_BYTES} once above it")
+            # dirty detection pays off where the fingerprint pass avoids
+            # moving the data (TPU kernel) or where there is no transfer
+            # at all (CPU); on other accelerators the host fingerprint
+            # would itself pull every byte off-device — worse than dense
+            if _backend() not in ("cpu", "tpu"):
+                self.sparse_capture = False
+        self.sparse_chunk_bytes = sparse_chunk_bytes
+        self.sparse_min_bytes = (sparse_min_bytes if sparse_min_bytes
+                                 is not None else 2 * sparse_chunk_bytes)
+        self._fp: Dict[Tuple[str, str], _LeafFP] = {}
+        self._fp_step: Optional[int] = None
+        self._cap_chain_len = 0
+        self._fp_invalid = False          # set by encode-thread failures
+        self._fp_pool: Optional[ThreadPoolExecutor] = None
+        self._fp_workers = 1
+        if self.sparse_capture:
+            import os
+            self._fp_workers = min(4, os.cpu_count() or 1)
+            if self._fp_workers > 1:
+                self._fp_pool = ThreadPoolExecutor(
+                    max_workers=self._fp_workers,
+                    thread_name_prefix="snap-fp")
         self.stats: Dict[str, Any] = {
             "saves": 0, "skipped": 0, "failed": 0, "chain_links": 0,
-            "bytes_written": 0, "bytes_logical": 0,
+            "bytes_written": 0, "bytes_logical": 0, "bytes_encoded": 0,
+            "capture_bytes": 0, "sparse_leaves": 0, "identity_skips": 0,
+            "dirty_chunks": 0, "clean_chunks": 0,
             "save_seconds": 0.0, "capture_seconds": 0.0,
             "encode_commit_seconds": 0.0,
         }
@@ -206,9 +501,28 @@ class AsyncSnapshotter:
         if slot is None:
             self.stats["skipped"] += 1
             return None
+        ctx: Optional[_SparseCtx] = None
+        if self.sparse_capture:
+            with self._cond:
+                if self._fp_invalid:  # an encode failure broke the chain
+                    self._fp.clear()
+                    self._fp_step = None
+                    self._cap_chain_len = 0
+                    self._fp_invalid = False
+            ctx = _SparseCtx(
+                fp=self._fp,
+                chain=(self._fp_step is not None and
+                       self._cap_chain_len < self.delta_base_interval - 1),
+                base_step=self._fp_step,
+                chunk_bytes=self.sparse_chunk_bytes,
+                min_bytes=self.sparse_min_bytes,
+                codec_by_kind=self.codec_by_kind,
+                pool=self._fp_pool,
+                workers=self._fp_workers,
+            )
         t0 = time.monotonic()
         try:
-            host_state = slot.capture(upper)
+            host_state, cap_st = slot.capture(upper, ctx)
             cap = _Captured(
                 step=step,
                 slot=slot,
@@ -221,11 +535,23 @@ class AsyncSnapshotter:
                 capture_seconds=time.monotonic() - t0,
             )
         except BaseException:
+            if ctx is not None:
+                # a partial capture may have advanced some leaves'
+                # baselines: comparing against them next time would
+                # silently mark truly-changed chunks clean
+                self._fp.clear()
+                self._fp_step = None
+                self._cap_chain_len = 0
             self._release_slot(slot)
             raise
+        if ctx is not None:
+            self._cap_chain_len = self._cap_chain_len + 1 if ctx.chain else 0
+            self._fp_step = step
         handle = SnapshotHandle(step)
         handle.timings["capture"] = cap.capture_seconds
         self.stats["capture_seconds"] += cap.capture_seconds
+        for k, n in cap_st.items():
+            self.stats[k] += n
         with self._cond:
             self._inflight.append(handle)
         self._encode_pool.submit(self._encode_and_commit, cap, handle)
@@ -242,6 +568,10 @@ class AsyncSnapshotter:
             with self._cond:
                 self._last_error = e   # drain() re-raises even if the
                 self.stats["failed"] += 1  # handle is retired by then
+                # the chain base (and possibly a half-patched mirror) is
+                # gone; the next capture must re-baseline and the next
+                # snapshot will be a full base
+                self._fp_invalid = True
             self._retire(cap.slot, handle, keep_as_prev=False)
             handle._future.set_exception(e)
             return
@@ -252,7 +582,8 @@ class AsyncSnapshotter:
         self.stats["save_seconds"] += cap.capture_seconds + dt
         self._retire(cap.slot, handle,
                      keep_as_prev=self.delta_base_interval > 1,
-                     step=cap.step, host_state=cap.host_state)
+                     step=cap.step, host_state=cap.host_state,
+                     reuse_prev=getattr(cap, "sparse_committed", False))
         handle._future.set_result(manifest)
 
     def _do_encode_commit(self, cap: _Captured) -> Dict[str, Any]:
@@ -261,27 +592,82 @@ class AsyncSnapshotter:
         base_step = self._prev[0] if chain else None
         base_state = self._prev[1] if chain else {}
 
+        has_sparse = any(isinstance(x, _SparseLeaf)
+                         for leaves in cap.host_state.values()
+                         for x in leaves.values())
+        if has_sparse and not chain:
+            # capture predicted a chain link that encode can't honor
+            # (the previous snapshot failed after this capture ran);
+            # the sparse payload alone can't produce a full base
+            raise RuntimeError(
+                "sparse capture lost its chain base (a preceding "
+                "snapshot failed); this snapshot cannot be encoded")
+
         writer = _BlobWriter(self.backend, self._writer_pool)
         entries_manifest: Dict[str, Any] = {}
-        written = logical = 0
+        written = logical = encoded = 0
         for name, leaves in cap.host_state.items():
             codec = self.codec_by_kind.get(cap.kinds[name])
             leaf_metas: Dict[str, Any] = {}
             for path, arr in leaves.items():
-                prev_arr = None
-                if chain and not deltamod.codec_applicable(arr, codec):
+                if isinstance(arr, _SparseLeaf):
+                    if arr.base_step != base_step:
+                        raise RuntimeError(
+                            f"sparse capture of {name}:{path} is relative "
+                            f"to step {arr.base_step}, but the encode "
+                            f"chain base is {base_step}")
                     prev_arr = base_state.get(name, {}).get(path)
-                m = deltamod.encode_leaf(
-                    arr, writer.put, writer.has,
-                    codec=codec, prev=prev_arr, compress=self.compress)
+                    if prev_arr is None:
+                        raise RuntimeError(
+                            f"sparse capture of {name}:{path} has no "
+                            "previous value in the pinned mirror")
+                    m = deltamod.encode_leaf_sparse(
+                        arr.shape, arr.dtype, arr.chunk_bytes,
+                        arr.n_chunks, arr.dirty_idx,
+                        arr.dirty_bytes if arr.dirty_bytes is not None
+                        else np.empty((0, arr.chunk_bytes), np.uint8),
+                        prev_arr, writer.put, writer.has,
+                        compress=self.compress)
+                    logical += arr.nbytes
+                else:
+                    prev_arr = None
+                    if chain and not deltamod.codec_applicable(arr, codec):
+                        prev_arr = base_state.get(name, {}).get(path)
+                    m = deltamod.encode_leaf(
+                        arr, writer.put, writer.has,
+                        codec=codec, prev=prev_arr, compress=self.compress)
+                    logical += arr.nbytes
+                    if has_sparse:
+                        # the old prev slot stays pinned as the mirror;
+                        # fold this dense leaf's bytes into it so the
+                        # mirror is the complete current snapshot (the
+                        # staged copy belongs to a slot about to be
+                        # freed, so take a private copy)
+                        mirror = base_state.setdefault(name, {})
+                        old = mirror.get(path)
+                        if old is not None and old.shape == arr.shape \
+                                and old.dtype == arr.dtype:
+                            np.copyto(old, arr)
+                        else:
+                            mirror[path] = np.array(arr)
                 written += m.pop("bytes_written", 0)
-                logical += arr.nbytes
+                encoded += m.pop("bytes_encoded", 0)
                 leaf_metas[path] = m
             entries_manifest[name] = {"kind": cap.kinds[name],
                                       "leaves": leaf_metas}
+        if has_sparse:
+            # leaves absent from this snapshot must leave the mirror too
+            for name in list(base_state):
+                cur = cap.host_state.get(name)
+                if cur is None:
+                    del base_state[name]
+                    continue
+                for path in [p for p in base_state[name] if p not in cur]:
+                    del base_state[name][path]
         writer.drain()  # every blob durable before the manifest commits
         manifest = {
-            "format": MANIFEST_FORMAT,
+            "format": (SPARSE_MANIFEST_FORMAT if has_sparse
+                       else MANIFEST_FORMAT),
             "step": cap.step,
             "base_step": base_step,
             "entries": entries_manifest,
@@ -289,12 +675,14 @@ class AsyncSnapshotter:
             "structure": cap.structure,
             "job": cap.job_meta,
         }
+        cap.sparse_committed = has_sparse
         self.backend.commit_manifest(cap.step, manifest)
         self._chain_len = self._chain_len + 1 if chain else 0
         if chain:
             self.stats["chain_links"] += 1
         self.stats["bytes_written"] += written
         self.stats["bytes_logical"] += logical
+        self.stats["bytes_encoded"] += encoded
         if self.keep_last is not None:
             try:
                 self.gc(self.keep_last)
@@ -306,21 +694,29 @@ class AsyncSnapshotter:
 
     def _retire(self, slot: _StagingSlot, handle: SnapshotHandle,
                 keep_as_prev: bool, step: int = -1,
-                host_state=None) -> None:
+                host_state=None, reuse_prev: bool = False) -> None:
         """Slot bookkeeping after a snapshot leaves the pipeline: the
         committed slot becomes the next XOR base (when chaining); the
-        base it replaced is freed. The handle's result is set by the
-        caller right after — anyone blocked on it wakes with the slots
-        already released."""
+        base it replaced is freed. A sparse commit (``reuse_prev``)
+        instead advanced the pinned mirror in place — the old prev slot
+        *stays* prev (now holding this snapshot's bytes) and the capture
+        slot's spent dirty payload is freed. The handle's result is set
+        by the caller right after — anyone blocked on it wakes with the
+        slots already released."""
         with self._cond:
             old_prev = self._prev
-            if keep_as_prev:
-                self._prev = (step, host_state, slot)
-            else:
-                self._prev = None
+            if reuse_prev:
+                assert old_prev is not None  # encode validated the base
+                self._prev = (step, old_prev[1], old_prev[2])
                 slot.busy = False
-            if old_prev is not None and old_prev[2] is not slot:
-                old_prev[2].busy = False
+            else:
+                if keep_as_prev:
+                    self._prev = (step, host_state, slot)
+                else:
+                    self._prev = None
+                    slot.busy = False
+                if old_prev is not None and old_prev[2] is not slot:
+                    old_prev[2].busy = False
             self._inflight = [h for h in self._inflight if h is not handle]
             self._cond.notify_all()
 
@@ -358,6 +754,8 @@ class AsyncSnapshotter:
         finally:
             self._encode_pool.shutdown(wait=True)
             self._writer_pool.shutdown(wait=True)
+            if self._fp_pool is not None:
+                self._fp_pool.shutdown(wait=True)
 
     # --- gc ----------------------------------------------------------------
 
@@ -430,12 +828,27 @@ class _BlobWriter:
 # restore side: delta chain -> full state
 # ---------------------------------------------------------------------------
 
+# manifest formats this build can decode (1: whole-tree, 2: delta chain,
+# 3: sparse dirty-chunk links); a newer format means a newer build wrote
+# the checkpoint and silently misreading it would be worse than failing
+KNOWN_MANIFEST_FORMATS = (1, 2, 3)
+
+
+def check_manifest_format(manifest: Dict[str, Any]) -> None:
+    fmt = manifest.get("format", 1)
+    if fmt not in KNOWN_MANIFEST_FORMATS:
+        raise ValueError(
+            f"checkpoint manifest format {fmt} is newer than this build "
+            f"understands (known: {KNOWN_MANIFEST_FORMATS})")
+
+
 def manifest_chain_steps(backend: CheckpointBackend, step: int) -> List[int]:
     """base-first list of steps whose manifests `step` depends on."""
     chain = []
     s: Optional[int] = step
     while s is not None:
         m = backend.get_manifest(s)
+        check_manifest_format(m)
         chain.append(s)
         s = m.get("base_step")
     chain.reverse()
@@ -472,7 +885,9 @@ def materialize_manifest_chain(
     latency is bounded by the largest leaf's chain, not the sum of all
     of them. Leaves that exist only in intermediate manifests — or are
     non-xor there — are never decoded, so restore cost per leaf stays
-    O(xor-run length), not O(chain length).
+    O(xor-run length), not O(chain length). Sparse (format-3) links
+    apply as copy + dirty-chunk patch rather than a full-buffer XOR, so
+    chain application also scales with what each link changed.
 
     ``workers``: decode pool size; default scales with the host, 1
     forces the serial path (both orders produce identical arrays).

@@ -8,12 +8,16 @@ serve steps on the pipeline's encode thread + writer pool. A checkpoint
 exists iff its manifest committed (fsync+rename in the backend), so a
 crash mid-write never corrupts the latest checkpoint.
 
-Manifests are format 2: they may record a ``base_step``, forming a delta
-chain of XOR links back to a full base snapshot
-(``delta_base_interval``). ``restore`` materializes the chain — full base
-decoded first, each delta link XOR-applied forward — and returns host
-state plus the PRUNED op-log (record-prune-replay) and upper-half
-structure, which is everything restore needs on any topology.
+Manifests are format 2 or 3: they may record a ``base_step``, forming a
+delta chain of XOR links back to a full base snapshot
+(``delta_base_interval``). With ``sparse_capture`` (the default when
+chaining), chain links are *sparse*: capture fingerprints each leaf
+per-chunk (kernels/ckpt_codec) and transfers only dirty chunks, and the
+manifest (format 3) records only those chunks. ``restore`` materializes
+the chain — full base decoded first, each delta link applied forward —
+and returns host state plus the PRUNED op-log (record-prune-replay) and
+upper-half structure, which is everything restore needs on any topology.
+Formats 1-3 all restore through the same path (matrix in README).
 
 Synchronous behavior (``async_save=False`` or ``save(block=True)``) runs
 the same pipeline and joins it before returning.
@@ -54,12 +58,18 @@ class CheckpointManager:
         backpressure: str = "block",
         writers: int = 4,
         compress: bool = True,
+        sparse_capture: bool = True,
+        sparse_chunk_bytes: Optional[int] = None,
+        sparse_min_bytes: Optional[int] = None,
     ) -> None:
         self.backend = backend
         # e.g. {"opt_state": "int8"} — moments tolerate quantization
         self.codec_by_kind = codec_by_kind or {}
         self.async_save = async_save
         self.keep_last = keep_last
+        extra: Dict[str, Any] = {}
+        if sparse_chunk_bytes is not None:
+            extra["sparse_chunk_bytes"] = sparse_chunk_bytes
         self.pipeline = AsyncSnapshotter(
             backend,
             codec_by_kind=codec_by_kind,
@@ -69,6 +79,9 @@ class CheckpointManager:
             compress=compress,
             keep_last=keep_last,
             prune_oplog=prune_oplog,
+            sparse_capture=sparse_capture,
+            sparse_min_bytes=sparse_min_bytes,
+            **extra,
         )
 
     @property

@@ -31,6 +31,17 @@ still decoded for old checkpoints:
      "codec": "int8"|None,
      "parts": {part: {"dtype", "shape", "chunks": [hash|None, ...],
                       "enc": ["raw"|"zlib", ...]}}}
+
+Format 3 adds *sparse* xor parts, produced by the dirty-chunk capture
+path (``encode_leaf_sparse``): instead of a dense chunk list with None
+placeholders, the part records only the chunks that changed —
+
+    {"dtype", "shape", "chunk_bytes": int, "n_chunks": int,
+     "dirty": [[chunk_idx, hash, enc], ...]}
+
+Decoding a sparse part copies the base value and XOR-patches the dirty
+chunks, so chain application cost also scales with the delta. Formats
+1-3 are all decoded by this module (compatibility matrix in README).
 """
 from __future__ import annotations
 
@@ -164,13 +175,6 @@ def _use_device_xor() -> bool:
     return _device_xor
 
 
-def _xor_chunk(a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    if _use_device_xor() and a.nbytes >= _DEVICE_XOR_MIN_BYTES:
-        from repro.kernels.ckpt_codec import ops
-        return ops.delta_encode(a, b)
-    return np.bitwise_xor(a, b)
-
-
 def _encode_part(p: np.ndarray, put_blob, has_blob, *,
                  prev: Optional[np.ndarray] = None,
                  compress: bool = True) -> Tuple[Dict[str, Any], int]:
@@ -179,12 +183,23 @@ def _encode_part(p: np.ndarray, put_blob, has_blob, *,
     chunks: List[Optional[str]] = []
     encs: List[str] = []
     written = 0
+    # the device-vs-host XOR decision is per-part, not per-chunk: the
+    # backend probe is hoisted out of the chunk loop
+    if prev is not None and _use_device_xor():
+        from repro.kernels.ckpt_codec import ops
+
+        def xor(a, b):
+            if a.nbytes >= _DEVICE_XOR_MIN_BYTES:
+                return ops.delta_encode(a, b)
+            return np.bitwise_xor(a, b)
+    else:
+        xor = np.bitwise_xor
     prev_iter = iter_chunk_views(p if prev is None else prev)
     for view in iter_chunk_views(p):
         if prev is not None:
             pview = next(prev_iter)
-            delta = _xor_chunk(np.frombuffer(view, np.uint8),
-                               np.frombuffer(pview, np.uint8))
+            delta = xor(np.frombuffer(view, np.uint8),
+                        np.frombuffer(pview, np.uint8))
             if not delta.any():
                 chunks.append(None)   # unchanged region: costs nothing
                 encs.append(ENC_RAW)
@@ -203,6 +218,10 @@ def _encode_part(p: np.ndarray, put_blob, has_blob, *,
 
 def _decode_part(pmeta: Dict[str, Any], get_blob,
                  prev: Optional[np.ndarray] = None) -> np.ndarray:
+    if "dirty" in pmeta:  # format-3 sparse dirty-chunk part
+        if prev is None:
+            raise ValueError("sparse xor part needs its base-step value")
+        return _decode_part_sparse(pmeta, get_blob, prev)
     dt = _np_dtype(pmeta["dtype"])
     shape = pmeta["shape"]
     total = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
@@ -218,6 +237,91 @@ def _decode_part(pmeta: Dict[str, Any], get_blob,
     if prev is not None:
         pb = np.ascontiguousarray(prev).reshape(-1).view(np.uint8)
         np.bitwise_xor(out, pb, out=out)
+    return out.view(dt).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# sparse (dirty-chunk) encode/decode — manifest format 3 leaves
+# ---------------------------------------------------------------------------
+
+def encode_leaf_sparse(
+    shape: Tuple[int, ...],
+    dtype: np.dtype,
+    chunk_bytes: int,
+    n_chunks: int,
+    dirty_idx: np.ndarray,
+    dirty_bytes: np.ndarray,
+    prev: np.ndarray,
+    put_blob: Callable[[str, bytes], None],
+    has_blob: Callable[[str], bool],
+    *,
+    compress: bool = True,
+    patch_prev: bool = True,
+) -> Dict[str, Any]:
+    """Encode one leaf from a sparse dirty-chunk capture.
+
+    ``dirty_bytes`` is the gather-compacted [k, chunk_bytes] uint8 payload
+    from capture (tail chunk zero-padded); ``prev`` is the previous
+    snapshot's full value of this leaf (the XOR base). Only the dirty
+    chunks are XORed, hashed and stored — encode work scales with what
+    changed, not with the leaf.
+
+    When ``patch_prev`` (the pipeline's mode), ``prev`` is updated IN
+    PLACE chunk by chunk, so after the leaf is encoded the buffer holds
+    the *current* snapshot's bytes — the pipeline keeps one full host
+    mirror alive instead of two.
+    """
+    dtype = np.dtype(dtype)
+    total = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    prev_b = np.ascontiguousarray(prev).reshape(-1).view(np.uint8)
+    assert prev_b.size == total, (prev_b.size, total)
+    dirty: List[List[Any]] = []
+    written = encoded = 0
+    for j, idx in enumerate(np.asarray(dirty_idx, np.int64)):
+        off = int(idx) * chunk_bytes
+        ln = min(chunk_bytes, total - off)
+        cur = dirty_bytes[j, :ln]
+        pv = prev_b[off:off + ln]
+        delta = np.bitwise_xor(cur, pv)
+        encoded += ln
+        if patch_prev:
+            pv[:] = cur
+        if not delta.any():
+            continue  # conservative dirty mark; nothing actually changed
+        h, enc, w = _store_chunk(delta.tobytes(), put_blob, has_blob,
+                                 compress)
+        dirty.append([int(idx), h, enc])
+        written += w
+    return {
+        "shape": list(shape),
+        "dtype": str(dtype),
+        "codec": None,
+        "mode": "xor",
+        "parts": {"raw": {"dtype": str(dtype), "shape": list(shape),
+                          "chunk_bytes": int(chunk_bytes),
+                          "n_chunks": int(n_chunks),
+                          "dirty": dirty}},
+        "bytes_written": written,
+        "bytes_encoded": encoded,
+    }
+
+
+def _decode_part_sparse(pmeta: Dict[str, Any], get_blob,
+                        prev: np.ndarray) -> np.ndarray:
+    """Sparse chain link: copy the base value and XOR-patch only the
+    dirty chunks — chain application cost scales with the delta."""
+    dt = _np_dtype(pmeta["dtype"])
+    shape = pmeta["shape"]
+    cb = pmeta["chunk_bytes"]
+    total = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+    out = np.ascontiguousarray(prev).reshape(-1).view(np.uint8).copy()
+    assert out.size == total, (out.size, total)
+    for idx, entry, enc in pmeta["dirty"]:
+        off = idx * cb
+        ln = min(cb, total - off)
+        data = _load_chunk(entry, enc, ln, get_blob)
+        np.bitwise_xor(out[off:off + ln], np.frombuffer(data, np.uint8),
+                       out=out[off:off + ln])
     return out.view(dt).reshape(shape)
 
 
@@ -268,6 +372,9 @@ def encode_leaf(
         meta["parts"]["raw"] = pmeta
         written += w
     meta["bytes_written"] = written
+    # dense modes read + process the whole leaf regardless of how little
+    # changed; the sparse encoder reports only its dirty-chunk bytes here
+    meta["bytes_encoded"] = arr.nbytes
     return meta
 
 
@@ -320,5 +427,8 @@ def referenced_hashes(manifest: Dict[str, Any]) -> set:
     for entry in manifest.get("entries", {}).values():
         for leaf in entry["leaves"].values():
             for pmeta in leaf["parts"].values():
-                out.update(h for h in pmeta["chunks"] if h is not None)
+                if "dirty" in pmeta:
+                    out.update(h for _, h, _ in pmeta["dirty"])
+                else:
+                    out.update(h for h in pmeta["chunks"] if h is not None)
     return out

@@ -71,8 +71,13 @@ class Incarnation:
 
     def materialize(self) -> RestoredState:
         """Walk the manifest's ``base_step`` delta chain back to its full
-        base and decode every leaf forward (XOR-applying chain links),
-        fanned out across a decode worker pool. The result is plain host
+        base and decode every leaf forward, fanned out across a decode
+        worker pool. Dense links (formats 1-2) XOR-apply whole buffers;
+        sparse links (format 3, dirty-chunk capture) patch only the
+        chunks the link recorded — so restoring a long chain of sparse
+        snapshots costs the base decode plus the sum of the deltas, not
+        chain length x state size. Unknown newer manifest formats are
+        rejected up front rather than misread. The result is plain host
         arrays + the pruned op-log — everything restore needs, on any
         topology."""
         if self.restored is not None:

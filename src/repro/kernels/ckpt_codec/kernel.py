@@ -21,6 +21,10 @@ from jax.experimental import pallas as pl
 BLOCK = 256
 ROWS_PER_TILE = 512
 
+# fingerprint mixing constants — shared with ref.fingerprint_ref
+_FP_XOR_C = 0x5BD1E995
+_FP_MUL_C = 0x9E3779B1 - (1 << 32)  # as signed int32
+
 
 def _quant_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...]                                  # [R, BLOCK] f32
@@ -78,6 +82,41 @@ def xor_blocks(a: jax.Array, b: jax.Array, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((nb, BLOCK), jnp.int32),
         interpret=interpret,
     )(a, b)
+
+
+def _fingerprint_kernel(x_ref, o_ref):
+    # two positional multiply-mix hashes over one chunk's int32 lanes;
+    # int32 arithmetic wraps, matching ref.fingerprint_ref exactly
+    x = x_ref[...]                                   # [R, BLOCK] i32
+    r, c = x.shape
+    row = jax.lax.broadcasted_iota(jnp.int32, (r, c), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (r, c), 1)
+    pos = row * c + col                              # index within chunk
+    h1 = jnp.sum(x * (2 * pos + 1))
+    h2 = jnp.sum((x ^ jnp.int32(_FP_XOR_C)) * (2 * pos + jnp.int32(_FP_MUL_C)))
+    o_ref[0, 0] = h1
+    o_ref[0, 1] = h2
+
+
+def fingerprint_blocks(xb: jax.Array, rows_per_chunk: int, *,
+                       interpret: bool = False):
+    """xb: i32 [n_chunks * rows_per_chunk, BLOCK] (one chunk =
+    ``rows_per_chunk`` rows, padded by ops.py) -> i32 [n_chunks, 2].
+
+    One VMEM pass per chunk: the whole leaf is read once at HBM
+    bandwidth and only 8 B of fingerprint per chunk ever leaves the
+    device — dirty detection without a device->host copy of the data."""
+    nb = xb.shape[0]
+    assert nb % rows_per_chunk == 0, (nb, rows_per_chunk)
+    grid = (nb // rows_per_chunk,)
+    return pl.pallas_call(
+        _fingerprint_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows_per_chunk, BLOCK), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb // rows_per_chunk, 2), jnp.int32),
+        interpret=interpret,
+    )(xb)
 
 
 def _dequant_kernel(q_ref, s_ref, x_ref):

@@ -3,24 +3,37 @@ dispatch, interpret fallback on CPU)."""
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.ckpt_codec import kernel as K
-from repro.kernels.ckpt_codec.ref import BLOCK
+from repro.kernels.ckpt_codec.ref import BLOCK, FP_CHUNK_BYTES
+
+# The backend never changes within a process, but jax.default_backend()
+# re-resolves the platform stack on every call — and every new input
+# shape retraces these jit wrappers, re-probing it. Resolve once.
+_INTERPRET_DEFAULT: Optional[bool] = None
+
+
+def _default_interpret() -> bool:
+    global _INTERPRET_DEFAULT
+    if _INTERPRET_DEFAULT is None:
+        _INTERPRET_DEFAULT = jax.default_backend() != "tpu"
+    return _INTERPRET_DEFAULT
 
 
 def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+    return not _default_interpret()
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def quantize(x: jax.Array, *, interpret: bool = None):
     """x: f32 any shape -> (q [nb, BLOCK] int8, scale [nb] f32)."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = _default_interpret()
     flat = x.astype(jnp.float32).reshape(-1)
     pad = (-flat.size) % BLOCK
     xb = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
@@ -37,7 +50,7 @@ def quantize(x: jax.Array, *, interpret: bool = None):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def _xor_i32(a: jax.Array, b: jax.Array, *, interpret: bool = None):
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = _default_interpret()
     nb = a.shape[0]
     rows = min(K.ROWS_PER_TILE, nb)
     rpad = (-nb) % rows
@@ -74,10 +87,94 @@ def delta_decode(delta: np.ndarray, prev: np.ndarray, dtype,
     return np.frombuffer(raw.tobytes(), dtype=dtype).reshape(shape)
 
 
+# ---------------------------------------------------------------------------
+# dirty-chunk fingerprints + device-side gather compaction
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("chunk_bytes", "interpret"))
+def _fingerprint_impl(x: jax.Array, *, chunk_bytes: int,
+                      interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    xi = _device_i32_chunks(x, chunk_bytes)
+    rows = chunk_bytes // (4 * BLOCK)
+    return K.fingerprint_blocks(xi.reshape(-1, BLOCK), rows,
+                                interpret=interpret)
+
+
+def _device_i32_chunks(x: jax.Array, chunk_bytes: int) -> jax.Array:
+    """Reinterpret a device array as i32 [n_chunks, chunk_elems] without
+    leaving the device (zero-padded to a chunk multiple)."""
+    flat = x.reshape(-1)
+    if flat.dtype.itemsize != 4:
+        b = jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1)
+        pad = (-b.size) % chunk_bytes
+        if pad:
+            b = jnp.pad(b, (0, pad))
+        xi = jax.lax.bitcast_convert_type(b.reshape(-1, 4), jnp.int32)
+    else:
+        xi = jax.lax.bitcast_convert_type(flat, jnp.int32)
+        pad = (-xi.size) % (chunk_bytes // 4)
+        if pad:
+            xi = jnp.pad(xi, (0, pad))
+    return xi.reshape(-1, chunk_bytes // 4)
+
+
+def chunk_fingerprints(x, chunk_bytes: int = FP_CHUNK_BYTES, *,
+                       interpret: bool = None) -> jax.Array:
+    """Per-chunk fingerprints of a (device or host) array through the
+    Pallas kernel: i32 [n_chunks, 2]. The leaf is read once on device;
+    only the fingerprints are small enough to compare/keep resident.
+    chunk_bytes must be a multiple of 4*BLOCK (one i32 lane row)."""
+    assert chunk_bytes % (4 * BLOCK) == 0, chunk_bytes
+    return _fingerprint_impl(jnp.asarray(x), chunk_bytes=chunk_bytes,
+                             interpret=interpret)
+
+
+@jax.jit
+def _dirty_mask(fp: jax.Array, prev_fp: jax.Array) -> jax.Array:
+    return jnp.any(fp != prev_fp, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_bytes",))
+def _gather_chunks(x: jax.Array, idx: jax.Array, *, chunk_bytes: int):
+    xi = _device_i32_chunks(x, chunk_bytes)
+    return jnp.take(xi, idx, axis=0)
+
+
+def dirty_chunk_capture(x, prev_fp, chunk_bytes: int = FP_CHUNK_BYTES, *,
+                        interpret: bool = None
+                        ) -> Tuple[jax.Array, np.ndarray, Optional[np.ndarray]]:
+    """Device-side incremental capture of one leaf.
+
+    Fingerprints ``x`` on device, compares against the previous
+    snapshot's device-resident fingerprints, gather-compacts the dirty
+    chunks on device, and returns
+    ``(new_fp [device], dirty_idx [host i64], dirty_bytes [host u8
+    [k, chunk_bytes] or None])`` — the data makes exactly one
+    device->host hop, sized by what changed rather than by the leaf.
+
+    The gather index vector is padded to the next power of two so jit
+    retraces O(log n_chunks) variants, not one per dirty count.
+    """
+    fp = chunk_fingerprints(x, chunk_bytes, interpret=interpret)
+    mask = np.asarray(jax.device_get(_dirty_mask(fp, prev_fp)))
+    idx = np.nonzero(mask)[0]
+    if idx.size == 0:
+        return fp, idx, None
+    padded = 1 << (idx.size - 1).bit_length()
+    idxp = np.full(padded, idx[-1], np.int32)
+    idxp[:idx.size] = idx
+    compact = _gather_chunks(jnp.asarray(x), jnp.asarray(idxp),
+                             chunk_bytes=chunk_bytes)
+    host = np.asarray(jax.device_get(compact))[:idx.size]
+    return fp, idx, host.view(np.uint8).reshape(idx.size, chunk_bytes)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def dequantize(q: jax.Array, scale: jax.Array, *, interpret: bool = None):
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = _default_interpret()
     nb = q.shape[0]
     rows = min(K.ROWS_PER_TILE, nb)
     rpad = (-nb) % rows

@@ -61,23 +61,32 @@ def test_delta_chain_roundtrip_bit_identical(tmp_path):
 
 
 def test_chain_unchanged_leaf_writes_nothing(tmp_path):
-    """An untouched tensor's XOR delta is all zero chunks — elided
-    entirely, zero blob bytes."""
+    """An untouched tensor's delta link stores nothing: all-clean in the
+    sparse dirty-chunk path (format 3), all zero chunks elided in the
+    dense xor path (format 2). Zero blob bytes either way."""
     rng = np.random.RandomState(1)
-    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)),
-                            async_save=False, delta_base_interval=10)
-    up = _mk_upper(rng, n=300_000)
-    mgr.save(1, up, OpLog())
-    first = mgr.stats["bytes_written"]
-    mgr.save(2, up, OpLog())  # nothing changed: pure zero-delta link
-    assert mgr.stats["bytes_written"] == first
-    m = mgr.backend.get_manifest(2)
-    leaf = m["entries"]["params"]["leaves"]["['w']"]
-    assert leaf["mode"] == "xor"
-    assert all(c is None for c in leaf["parts"]["raw"]["chunks"])
-    r = mgr.restore(2)
-    np.testing.assert_array_equal(r.entries["params"]["['w']"],
-                                  up.get("params")["w"])
+    for sparse in (True, False):
+        mgr = CheckpointManager(LocalFSBackend(str(tmp_path / str(sparse))),
+                                async_save=False, delta_base_interval=10,
+                                sparse_capture=sparse)
+        up = _mk_upper(rng, n=300_000)
+        mgr.save(1, up, OpLog())
+        first = mgr.stats["bytes_written"]
+        mgr.save(2, up, OpLog())  # nothing changed: pure zero-delta link
+        assert mgr.stats["bytes_written"] == first
+        m = mgr.backend.get_manifest(2)
+        leaf = m["entries"]["params"]["leaves"]["['w']"]
+        assert leaf["mode"] == "xor"
+        raw = leaf["parts"]["raw"]
+        if sparse:
+            assert m["format"] == 3
+            assert raw["dirty"] == []       # not a single dirty chunk
+        else:
+            assert m["format"] == 2
+            assert all(c is None for c in raw["chunks"])
+        r = mgr.restore(2)
+        np.testing.assert_array_equal(r.entries["params"]["['w']"],
+                                      up.get("params")["w"])
 
 
 def test_gc_keeps_base_closure(tmp_path):

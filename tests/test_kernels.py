@@ -124,6 +124,53 @@ def test_codec_quantize_matches_ref(shape):
     np.testing.assert_allclose(np.asarray(xd), np.asarray(xr), rtol=1e-6)
 
 
+@pytest.mark.parametrize("n,chunk_bytes", [
+    (4096 * 3, 4096),        # exact chunk multiple
+    (4096 * 3 + 123, 4096),  # padded tail chunk
+    (257, 1024),             # single partial chunk
+])
+def test_codec_fingerprint_kernel_matches_ref(n, chunk_bytes):
+    """Pallas fingerprint kernel (interpret) vs the numpy multiply-mix
+    oracle, and single-byte sensitivity: flipping one byte flips exactly
+    that chunk's fingerprint."""
+    from repro.kernels.ckpt_codec.ops import chunk_fingerprints
+    from repro.kernels.ckpt_codec.ref import fingerprint_ref
+    rng = np.random.RandomState(0)
+    x = rng.randn(n).astype(np.float32)
+    fk = np.asarray(chunk_fingerprints(x, chunk_bytes,
+                                       interpret=True)).view(np.uint32)
+    fr = fingerprint_ref(x, chunk_bytes)
+    np.testing.assert_array_equal(fk, fr)
+
+    y = x.copy()
+    pos = (n // 2) * 4 + 1
+    y.view(np.uint8)[pos] ^= 0x40
+    fy = np.asarray(chunk_fingerprints(y, chunk_bytes,
+                                       interpret=True)).view(np.uint32)
+    changed = np.any(fy != fk, axis=1)
+    assert changed.sum() == 1 and changed[pos // chunk_bytes]
+
+
+def test_fingerprint_host_sensitivity():
+    """The fast host fingerprint (segment sums) catches any single-word
+    change and agrees with itself across chunk-aligned splits (the
+    threaded capture path fingerprints ranges independently)."""
+    from repro.kernels.ckpt_codec.ref import fingerprint_host
+    rng = np.random.RandomState(1)
+    buf = rng.randint(0, 256, size=3 * 4096 + 100, dtype=np.uint8)
+    fp = fingerprint_host(buf, 4096, seg_bytes=1024)
+    for pos in (0, 5000, buf.size - 1):
+        b2 = buf.copy()
+        b2[pos] ^= 1
+        fp2 = fingerprint_host(b2, 4096, seg_bytes=1024)
+        changed = np.any(fp2 != fp, axis=1)
+        assert changed.sum() == 1 and changed[pos // 4096]
+    split = 2 * 4096  # chunk-aligned: per-range fingerprints must agree
+    joined = np.vstack([fingerprint_host(buf[:split], 4096, seg_bytes=1024),
+                        fingerprint_host(buf[split:], 4096, seg_bytes=1024)])
+    np.testing.assert_array_equal(joined, fp)
+
+
 def test_codec_error_bound():
     """Blockwise int8: per-element error <= scale/2 <= max|block|/254."""
     from repro.kernels.ckpt_codec.ref import quantize_ref, dequantize_ref
