@@ -1,0 +1,161 @@
+"""MTTR per failure policy: detection → serving-again, measured.
+
+The paper's pitch is "a crash costs seconds"; MANA/CRIUgpu add that the
+seconds only materialize when the loop is automated. This benchmark
+injects a real host death under a ``ClusterSupervisor`` (the dead
+host's ShardedBackend directory is really deleted for the policies
+that restore) and measures the wall time from the poll that detects
+the death to the restored/remapped runner completing its next training
+step, per policy:
+
+  hot_spare          — HostMap rebind + logged DataReassign; the live
+                       runner never stops, so MTTR is the remap cost;
+  shrink             — storage repair + elastic Incarnation restore
+                       onto the survivors (DataReassign rewritten on
+                       replay);
+  restart_last_ckpt  — storage repair + Incarnation restore on the
+                       unchanged world.
+
+CLI:
+  PYTHONPATH=src:. python benchmarks/mttr.py \
+      [--smoke] [--check] [--json BENCH_mttr.json]
+
+``--check`` is the CI gate (soft — shared-runner timing is noisy): a
+hot-spare takeover must be cheaper than a restart-from-checkpoint, or
+having spares bought nothing; and every policy must actually execute.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+
+from repro.core import (CheckpointManager, ClusterSupervisor,
+                        ShardedBackend)
+from repro.train.loop import Trainer, TrainJob
+
+POLICIES = ("hot_spare", "shrink", "restart_last_ckpt")
+ARCHS = {"small": "starcoder2-3b-smoke", "medium": "qwen2.5-32b-smoke"}
+SMOKE_ARCHS = {"small": "starcoder2-3b-smoke"}
+
+
+def _incident(arch: str, policy: str) -> tuple:
+    """One death under one policy; returns (mttr_s, detail)."""
+    root = tempfile.mkdtemp()
+    mgr = None
+    try:
+        be = ShardedBackend(root, n_hosts=4, replicate=True)
+        mgr = CheckpointManager(be, async_save=False)
+        job = TrainJob(arch=arch, shape_key="train_s32_b4")
+        tr = Trainer(job, (1, 1), ("data", "model"), manager=mgr)
+        tr.init_state()
+        tr.train_steps(2)
+        tr.save(block=True)
+        tr.train_steps(1)        # uncommitted progress a rollback redoes
+
+        vt = [0.0]
+
+        def restore(target):
+            return Trainer.restore(mgr, step=target.step,
+                                   rewrite_op=target.rewrite_op())
+
+        sup = ClusterSupervisor(
+            [0, 1, 2, 3], manager=mgr,
+            spares=[7] if policy == "hot_spare" else [],
+            allow_shrink=(policy == "shrink"),
+            heartbeat_timeout=3.0, clock=lambda: vt[0],
+            n_shards=4, restore=restore, runner=tr)
+        for step in (1, 2, 3):
+            vt[0] += 1.0
+            for h in (0, 1, 2, 3):
+                sup.beat(h, step)
+        assert sup.poll() is None
+        if policy != "hot_spare":
+            # the death takes the host's storage: repair is on the path
+            shutil.rmtree(be.root / "host_001")
+            be.fail_host(1)
+        for step in (4, 5, 6, 7):
+            vt[0] += 1.0
+            for h in (0, 2, 3):
+                sup.beat(h, step)
+
+        t0 = time.monotonic()
+        target = sup.poll()              # detect + decide + execute
+        sup.runner.train_steps(1)        # ... and prove it serves again
+        mttr_s = time.monotonic() - t0
+        assert target is not None and target.action.value == policy, \
+            (policy, target)
+        return mttr_s, f"step={target.step} hosts={target.hosts}"
+    finally:
+        if mgr is not None:
+            mgr.close()   # shut the pipeline's thread pools down, not
+        shutil.rmtree(root, ignore_errors=True)  # at process exit
+
+
+def run(smoke: bool = False) -> list:
+    """One row per executed incident. A policy whose incident blows up
+    is reported and *skipped* — so check() can name the missing policy
+    instead of the whole benchmark dying on a raw traceback."""
+    import sys
+    rows = []
+    for name, arch in (SMOKE_ARCHS if smoke else ARCHS).items():
+        for policy in POLICIES:
+            try:
+                mttr_s, detail = _incident(arch, policy)
+            except Exception as e:  # noqa: BLE001 — surfaced by check()
+                print(f"# mttr/{name}/{policy} FAILED: {e!r}",
+                      file=sys.stderr)
+                continue
+            rows.append((f"mttr/{name}/{policy}", mttr_s * 1e6, detail))
+    return rows
+
+
+def check(rows: list, sizes) -> None:
+    """The gate: every policy executed for every expected size, and a
+    hot-spare takeover beat a restart-from-checkpoint (otherwise
+    keeping spares buys nothing). ``sizes`` is the expected size set —
+    derived from the run mode, not the rows, so a size whose every
+    incident failed is still named."""
+    by_name = {n: us for n, us, _ in rows}
+    failures = []
+    for size in sizes:
+        for policy in POLICIES:
+            if f"mttr/{size}/{policy}" not in by_name:
+                failures.append(f"{size}: policy {policy} never executed")
+    for size in sizes:
+        hot = by_name.get(f"mttr/{size}/hot_spare")
+        restart = by_name.get(f"mttr/{size}/restart_last_ckpt")
+        if hot is not None and restart is not None and hot >= restart:
+            failures.append(
+                f"{size}: hot-spare MTTR {hot / 1e6:.2f}s >= restart "
+                f"MTTR {restart / 1e6:.2f}s")
+    if failures:
+        raise SystemExit("mttr gate FAILED: " + "; ".join(failures))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest size only (CI regression gate)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless hot-spare MTTR beats "
+                         "restart MTTR (and all policies executed)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (CI artifact)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for n, us, derived in rows:
+        print(f"{n},{us:.1f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "us": us, "derived": d}
+                       for n, us, d in rows], f, indent=2)
+    if args.check:
+        check(rows, (SMOKE_ARCHS if args.smoke else ARCHS).keys())
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,9 @@
                     snapshots; the <30%-of-sync acceptance gate
   capture_stall   — dirty-chunk capture vs dense: stall + bytes must
                     scale with the change rate (<=50%-of-dense gate)
+  mttr            — detection -> serving-again per failure policy
+                    (hot-spare / shrink / restart; hot-spare < restart
+                    gate)
   roofline_table  — §Roofline: aggregated dry-run terms (reads
                     benchmarks/results/dryrun; run repro.launch.dryrun
                     first — missing cells simply produce no rows)
@@ -20,8 +23,8 @@ import sys
 
 def main() -> None:
     from benchmarks import (async_snapshot_bench, capture_stall,
-                            ckpt_codec_bench, oplog_bench, overhead,
-                            restart_speed, roofline_table)
+                            ckpt_codec_bench, mttr, oplog_bench,
+                            overhead, restart_speed, roofline_table)
     suites = {
         "restart_speed": restart_speed.run,
         "overhead": overhead.run,
@@ -29,6 +32,7 @@ def main() -> None:
         "ckpt_codec": ckpt_codec_bench.run,
         "async_snapshot": async_snapshot_bench.run,
         "capture_stall": capture_stall.run,
+        "mttr": mttr.run,
         "roofline": roofline_table.run,
     }
     want = sys.argv[1:] or list(suites)

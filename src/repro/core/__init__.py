@@ -1,6 +1,7 @@
 """Core: split-state transparent checkpoint/restart (the paper's
 contribution). See DESIGN.md §4."""
-from repro.core.virtual_ids import VirtualId, HandleTable, DeviceMap, StaleHandleError
+from repro.core.virtual_ids import (VirtualId, HandleTable, DeviceMap,
+                                    HostMap, StaleHandleError)
 from repro.core.oplog import (
     OpLog, MeshCreate, Compile, CacheAlloc, CacheFree, DataAdvance,
     DataReassign, ScheduleSet,
@@ -22,3 +23,6 @@ from repro.core.failure import (
     HeartbeatMonitor, StragglerDetector, FailurePolicy, FailureAction,
     rebalance_shards,
 )
+from repro.core import replication
+from repro.core.supervisor import (ClusterSupervisor, Incident,
+                                   RestoreTarget, SupervisorError)

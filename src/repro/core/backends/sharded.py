@@ -4,10 +4,14 @@ DMTCP writes one checkpoint file per rank, coordinated by a central
 coordinator that publishes completion. Here: blobs are hashed to N
 virtual hosts; each host owns a directory and writes its blobs in
 parallel (thread pool standing in for per-host writers); the coordinator
-commits the manifest only after every host's writes land. Optional peer
+commits the manifest only after every host's writes land — and verifies
+that claim at commit time: a manifest referencing a blob no live host
+can serve is refused, never published silently partial. Optional peer
 replication keeps each blob *also* on host (h+1) % N so a single-host
-loss restores without the primary (core.replication drives the failure
-injection).
+loss restores without the primary; ``core.replication`` rebuilds a lost
+host's directory from those peer copies (``replication.repair``), and
+``fail_host``/``heal_host`` here are the failure injection it and the
+tests drive.
 """
 from __future__ import annotations
 
@@ -52,31 +56,41 @@ class ShardedBackend(CheckpointBackend):
 
     # --- blobs -----------------------------------------------------------
 
-    def _paths(self, name: str) -> List[Path]:
+    def _placements(self, name: str) -> List[tuple]:
+        """(host, path) for every copy the blob should have, primary
+        first — the single definition of the placement/replication
+        layout (reads, writes and replication repair all derive from
+        it)."""
         h = _host_of(name, self.n_hosts)
-        paths = [self.root / f"host_{h:03d}" / name]
+        out = [(h, self.root / f"host_{h:03d}" / name)]
         if self.replicate:
             r = (h + 1) % self.n_hosts
-            paths.append(self.root / f"host_{r:03d}" / f"replica_{name}")
-        return paths
+            out.append((r, self.root / f"host_{r:03d}" / f"replica_{name}"))
+        return out
 
-    def _write(self, path: Path, data: bytes) -> None:
+    def _paths(self, name: str) -> List[Path]:
+        return [p for _, p in self._placements(name)]
+
+    def _write(self, path: Path, host: int, data: bytes) -> None:
+        if host in self._failed_hosts:
+            # the per-host writer is down: the write is LOST, and saying
+            # so here is what lets the pipeline abort before the
+            # manifest publishes a checkpoint it cannot serve
+            raise IOError(f"host {host} down; write of {path.name} lost")
         if path.exists():
             return
         write_atomic(path, data, self.fsync)
 
     def put_blob(self, name: str, data: bytes) -> None:
-        futures = [self._pool.submit(self._write, p, data)
-                   for p in self._paths(name)]
+        futures = [self._pool.submit(self._write, p, host, data)
+                   for host, p in self._placements(name)]
         done, _ = wait(futures)
         for f in done:
             f.result()
 
     def get_blob(self, name: str) -> bytes:
-        primary_host = _host_of(name, self.n_hosts)
         errors = []
-        for i, p in enumerate(self._paths(name)):
-            host = primary_host if i == 0 else (primary_host + 1) % self.n_hosts
+        for host, p in self._placements(name):
             if host in self._failed_hosts:
                 errors.append(f"host {host} down")
                 continue
@@ -86,12 +100,8 @@ class ShardedBackend(CheckpointBackend):
         raise FileNotFoundError(f"blob {name}: {'; '.join(errors)}")
 
     def has_blob(self, name: str) -> bool:
-        primary_host = _host_of(name, self.n_hosts)
-        for i, p in enumerate(self._paths(name)):
-            host = primary_host if i == 0 else (primary_host + 1) % self.n_hosts
-            if host not in self._failed_hosts and p.exists():
-                return True
-        return False
+        return any(host not in self._failed_hosts and p.exists()
+                   for host, p in self._placements(name))
 
     # --- coordinator manifests --------------------------------------------
 
@@ -99,6 +109,31 @@ class ShardedBackend(CheckpointBackend):
         return self.root / "coordinator" / f"step_{step:012d}.json"
 
     def commit_manifest(self, step: int, manifest: Dict[str, Any]) -> None:
+        # the coordinator's completion check, made real: every blob the
+        # manifest references must be servable by a live host *now*, or
+        # the commit fails loudly instead of publishing a checkpoint
+        # whose writes were silently lost (a down host's writer raises
+        # in put_blob, but this also catches out-of-band loss between
+        # write and commit). Blobs the parent chain link already
+        # references were verified at ITS commit and are skipped, so
+        # this stat pass is O(this snapshot's writes) — scaling with
+        # the change rate like the rest of the dirty-capture pipeline —
+        # not O(total checkpoint size). A vanished parent (GC race)
+        # falls back to verifying everything.
+        from repro.core.delta import referenced_hashes
+        from repro.core.replication import verify_restorable
+        exclude: set = set()
+        base = manifest.get("base_step")
+        if base is not None:
+            try:
+                exclude = referenced_hashes(self.get_manifest(base))
+            except FileNotFoundError:
+                pass
+        missing = verify_restorable(self, manifest, exclude=exclude)
+        if missing:
+            raise RuntimeError(
+                f"refusing to commit step {step}: {len(missing)} "
+                f"referenced blob(s) unservable (first: {missing[0]})")
         write_atomic(self._manifest_path(step),
                      json.dumps(manifest).encode(), self.fsync)
 

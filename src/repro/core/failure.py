@@ -2,9 +2,11 @@
 
 The detection logic is real (injectable clock makes it unit-testable);
 host liveness is fed by the launcher's heartbeat loop on hardware, or by
-tests/simulators here. Policies yield *decisions*; executing a decision
-goes through the logged runtime API so it replays correctly after a later
-restart (e.g. a DataReassign op for shard rebalancing).
+tests/simulators here. Policies yield *decisions*;
+``core.supervisor.ClusterSupervisor`` executes them end-to-end, routing
+every runtime mutation through the logged API so the decision replays
+correctly after a later restart (e.g. a DataReassign op for shard
+rebalancing).
 
 Policies:
   restart_last_ckpt — classic C/R: tear down, restore latest checkpoint
@@ -102,7 +104,10 @@ class FailurePolicy:
             mapping = {d: s for d, s in zip(dead, self.spares)}
             return FailureAction.HOT_SPARE, {"mapping": mapping}
         survivors = [h for h in world if h not in dead]
-        if self.allow_shrink and len(survivors) >= len(world) // 2:
+        # shrinking requires someone to shrink ONTO: an empty survivor
+        # set (last host died) must restart-in-place, not divide by zero
+        if self.allow_shrink and survivors \
+                and len(survivors) >= len(world) // 2:
             return FailureAction.SHRINK, {"survivors": survivors}
         return FailureAction.RESTART_LAST_CKPT, {}
 

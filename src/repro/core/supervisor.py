@@ -1,0 +1,437 @@
+"""ClusterSupervisor: the failure loop, closed (detect → decide → act).
+
+The paper's economics only land when nobody has to be paged: a crash
+costs seconds *if* something notices the death, picks a response, and
+drives the restart — MANA-for-MPI and CRIUgpu (PAPERS.md) both ship a
+coordinator for exactly this reason. Before this module the ingredients
+existed but nothing wired them together: ``HeartbeatMonitor`` /
+``FailurePolicy`` (core/failure.py) produced decisions nobody executed,
+and the restore machinery (core/incarnation.py) waited to be hand-driven.
+
+The supervisor runs the loop on a (simulated or real) multi-host world:
+
+    heartbeats ──> HeartbeatMonitor.dead_hosts()
+                        │
+                   FailurePolicy.decide()
+                        │
+          ┌─────────────┼──────────────────┐
+     HOT_SPARE        SHRINK         RESTART_LAST_CKPT
+     HostMap remap    unbind dead    (world unchanged;
+     + logged         logical hosts   hosts restart in
+     DataReassign     + elastic       place)
+     (no restore —    restore onto   storage repair +
+     peer-replicated  survivors +    Incarnation restore
+     state covers     rebalance      from latest
+     the loss)        shards         restorable step
+
+Execution is real, not advisory: HOT_SPARE rebinds the dead host's
+logical coordinate to a spare through ``core.virtual_ids.HostMap`` and
+replays a logged ``DataReassign`` (``rebalance_shards``) so the
+decision survives a *later* restart; SHRINK and RESTART tear the runner
+down, repair a degraded ``ShardedBackend`` from peer replicas
+(``core.replication``) and rebuild the runner through the caller's
+``restore`` hook — which drives the Incarnation lifecycle (the
+``RestoreTarget`` it receives carries the step, the surviving topology
+and a ready-made ``rewrite_op`` for re-shard/re-slot replay).
+
+The runner-*specific* rebuild (``Trainer.restore`` vs
+``ServingEngine.restore``) stays with the caller as the ``restore``
+hook; everything policy-shaped — detection, decision, storage repair,
+host-map surgery, reassignment logging, MTTR accounting — lives here,
+once, for both. ``launch/train.py --supervise`` and ``launch/serve.py
+--supervise`` route production entry points through it;
+``benchmarks/mttr.py`` measures detection→serving-again per policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.failure import (FailureAction, FailurePolicy,
+                                HeartbeatMonitor, HostState,
+                                StragglerDetector, rebalance_shards)
+from repro.core.oplog import DataReassign, Op
+from repro.core.virtual_ids import HostMap
+
+
+@dataclass
+class RestoreTarget:
+    """Everything a ``restore`` hook needs to rebuild the runner after a
+    decision: which action, which checkpoint step, which physical hosts
+    survive, and the rebalanced shard assignment (if the supervisor
+    manages shards). ``rewrite_op()`` hands the hook an op-log rewriter
+    that replays any logged ``DataReassign`` onto the new assignment —
+    the elastic re-shard path through ``Incarnation(rewrite_op=...)``."""
+    action: FailureAction
+    step: Optional[int]                       # latest restorable step
+    hosts: List[int]                          # physical world after the act
+    dead: List[int] = field(default_factory=list)
+    mapping: Dict[int, int] = field(default_factory=dict)   # dead -> spare
+    assignment: Optional[Tuple[Tuple[int, int], ...]] = None
+
+    def rewrite_op(self) -> Optional[Callable[[Op], Op]]:
+        if self.assignment is None:
+            return None
+        assignment = tuple(map(tuple, self.assignment))
+
+        def rewrite(op: Op) -> Op:
+            if isinstance(op, DataReassign):
+                return dataclasses.replace(op, assignment=assignment)
+            return op
+        return rewrite
+
+
+@dataclass
+class Incident:
+    """One executed decision, with its MTTR: detection (the poll that
+    flagged the death) → runner serving again (restore hook returned /
+    remap+reassign applied). ``wall_s`` is real elapsed time — the
+    number to report; ``mttr_s`` uses the supervisor's injected clock,
+    which in simulated worlds usually doesn't advance mid-execution
+    (kept for callers whose clock IS wall time)."""
+    action: str
+    dead: List[int]
+    step: Optional[int]
+    mttr_s: float
+    wall_s: float
+
+
+class SupervisorError(RuntimeError):
+    """The supervisor could not execute a decision (no restore hook, no
+    restorable checkpoint, unrecoverable storage)."""
+
+
+class ClusterSupervisor:
+    """Runs the detect→decide→execute loop for one job.
+
+    ``hosts``    physical ranks the job starts on (logical coordinates
+                 0..n-1 are bound to them through a ``HostMap``).
+    ``manager``  CheckpointManager — consulted for the latest restorable
+                 step and (ShardedBackend) storage repair.
+    ``spares``   idle physical ranks the HOT_SPARE policy may consume.
+    ``restore``  Callable[[RestoreTarget], runner] — rebuilds the runner
+                 through the Incarnation lifecycle (Trainer.restore /
+                 ServingEngine.restore). Required for RESTART/SHRINK.
+    ``teardown`` Callable[[runner], None] — optional explicit kill of
+                 the current runner before a restore (default: drop the
+                 reference; a real launcher would kill pods here).
+    ``reassign`` Callable[[runner, assignment], None] — apply + *log* a
+                 shard reassignment on the live runner. Defaults to
+                 duck-typing ``runner.apply_reassignment`` (Trainer).
+    ``n_shards`` data shards the supervisor balances across hosts; None
+                 disables shard management (serving).
+
+    The supervisor is deliberately synchronous and single-threaded: the
+    caller owns the loop (beat → poll → step), which is what makes the
+    whole failure path unit-testable with an injected clock — the same
+    property ``HeartbeatMonitor`` was built around.
+    """
+
+    def __init__(self, hosts: List[int], *,
+                 manager=None,
+                 spares: Optional[List[int]] = None,
+                 heartbeat_timeout: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic,
+                 allow_shrink: bool = True,
+                 n_shards: Optional[int] = None,
+                 restore: Optional[Callable[[RestoreTarget], Any]] = None,
+                 teardown: Optional[Callable[[Any], None]] = None,
+                 reassign: Optional[Callable[[Any, Any], None]] = None,
+                 straggler_k: float = 1.5,
+                 repair_storage: bool = True,
+                 runner: Any = None) -> None:
+        self.clock = clock
+        self.manager = manager
+        self.hostmap = HostMap(hosts)
+        self.monitor = HeartbeatMonitor(list(hosts),
+                                        timeout=heartbeat_timeout,
+                                        clock=clock)
+        self.policy = FailurePolicy(spares=list(spares or []),
+                                    allow_shrink=allow_shrink)
+        self.stragglers = StragglerDetector(self.monitor, k=straggler_k)
+        self.n_shards = n_shards
+        self.repair_storage = repair_storage
+        self._restore = restore
+        self._teardown = teardown
+        self._reassign = reassign
+        self.runner = runner
+        self.incidents: List[Incident] = []
+        self.events: List[Tuple[float, str, Dict[str, Any]]] = []
+        # the last assignment THIS supervisor applied; None until it has
+        # rebalanced once. Deliberately not seeded with a synthetic
+        # initial layout: the runner may have logged its own
+        # reassignments, and a restart must replay that log untouched
+        # unless the supervisor itself changed the topology.
+        self._assignment: Optional[Tuple[Tuple[int, int], ...]] = None
+
+    # --- world state ----------------------------------------------------
+
+    @property
+    def world(self) -> List[int]:
+        """Physical hosts currently running the job (logical order)."""
+        return self.hostmap.physical_hosts()
+
+    def _quiesce(self) -> None:
+        """Join the snapshot pipeline and absorb a casualty failure: an
+        in-flight snapshot whose writer died WITH the host re-raises
+        from ``wait()`` (the backend's loud-write contract), but that
+        casualty is part of the incident being handled — recovery must
+        proceed from the last *committed* step, not crash on it."""
+        if self.manager is None:
+            return
+        try:
+            self.manager.wait()
+        except Exception as e:  # noqa: BLE001 — logged, incident-scoped
+            self._event("casualty_snapshot", error=repr(e))
+
+    def latest_restorable_step(self) -> Optional[int]:
+        if self.manager is None:
+            return None
+        from repro.core.restore import restorable_steps
+        self._quiesce()
+        ok = restorable_steps(self.manager.backend)
+        return ok[-1] if ok else None
+
+    def _event(self, kind: str, **detail) -> None:
+        self.events.append((self.clock(), kind, detail))
+
+    # --- the loop: ingest, detect, decide, execute ----------------------
+
+    def beat(self, host: int, step: int) -> None:
+        """Heartbeat from a *physical* host (launcher loop / simulator)."""
+        if host in self.monitor.hosts:
+            self.monitor.beat(host, step)
+
+    def poll(self) -> Optional[RestoreTarget]:
+        """One detect→decide→execute cycle. Returns the executed
+        decision's RestoreTarget (action NONE is returned as None)."""
+        dead = self.monitor.dead_hosts()
+        if not dead:
+            return None
+        t0, w0 = self.clock(), time.monotonic()
+        action, info = self.policy.decide(dead, world=self.world)
+        self._event("decision", action=action.value, dead=list(dead),
+                    **{k: v for k, v in info.items() if k != "survivors"})
+        if action is FailureAction.HOT_SPARE:
+            target = self._do_hot_spare(dead, info["mapping"])
+        elif action is FailureAction.SHRINK:
+            target = self._do_shrink(dead, info["survivors"])
+        elif action is FailureAction.RESTART_LAST_CKPT:
+            target = self._do_restart(dead)
+        else:  # pragma: no cover — decide() never returns NONE for dead
+            return None
+        self.incidents.append(Incident(
+            action=action.value, dead=list(dead), step=target.step,
+            mttr_s=self.clock() - t0, wall_s=time.monotonic() - w0))
+        return target
+
+    def check_stragglers(self) -> List[int]:
+        """Straggler mitigation: hosts whose per-step EWMA exceeds
+        k×median get their data shards moved to the fast hosts, as a
+        *logged* DataReassign — the rebalance replays after any later
+        restart. Returns the flagged hosts (possibly already handled)."""
+        slow = self.stragglers.stragglers()
+        if not slow or self.n_shards is None:
+            return slow
+        fast = [h for h in self.world if h not in slow]
+        if not fast:
+            return slow
+        self._apply_assignment(rebalance_shards(self.n_shards, fast),
+                               reason="straggler", hosts=slow)
+        return slow
+
+    # --- decision execution ---------------------------------------------
+
+    def _do_hot_spare(self, dead: List[int],
+                      mapping: Dict[int, int]) -> RestoreTarget:
+        """Rebind each dead host's *logical* coordinate to its spare —
+        the vid stays stable, so everything addressing the logical rank
+        (shard ownership, the heartbeat world) follows the remap — then
+        rebalance shards over the new physical world, logged. No
+        rollback: peer-replicated state covers the loss — which is
+        exactly why storage repair runs here too (a no-op when the
+        dead host's storage survived): the next snapshot must not die
+        on a writer the takeover left down."""
+        self._quiesce()   # in-flight writers stop before repair copies
+        self._repair()
+        for d, s in mapping.items():
+            logical = self.hostmap.logical_of(d)
+            if logical is None:
+                raise SupervisorError(
+                    f"dead host {d} has no logical coordinate (world: "
+                    f"{self.hostmap.physical_hosts()}); cannot hand its "
+                    f"role to spare {s}")
+            self.hostmap.remap(logical, s)
+            del self.monitor.hosts[d]
+            self.monitor.hosts[s] = HostState(last_heartbeat=self.clock())
+            if s in self.policy.spares:
+                self.policy.spares.remove(s)
+            self._event("hot_spare", dead=d, spare=s, logical=logical)
+        hosts = self.world
+        assignment = None
+        if self.n_shards is not None:
+            assignment = self._apply_assignment(
+                rebalance_shards(self.n_shards, hosts),
+                reason="hot_spare", hosts=list(mapping.values()))
+        # storage repair may have blocked this thread past the timeout
+        self._reset_heartbeats()
+        return RestoreTarget(FailureAction.HOT_SPARE, step=None,
+                             hosts=hosts, dead=list(dead),
+                             mapping=dict(mapping), assignment=assignment)
+
+    def _do_shrink(self, dead: List[int],
+                   survivors: List[int]) -> RestoreTarget:
+        """Elastic restore onto the surviving topology: dead logical
+        hosts leave the world, the runner is rebuilt from the latest
+        restorable step with shards rebalanced over the survivors — the
+        ``RestoreTarget``'s ``rewrite_op`` replays the logged
+        ``DataReassign`` onto the new assignment during Incarnation
+        replay (the re-shard twin of serving's re-slot rewrite)."""
+        for d in dead:
+            logical = self.hostmap.logical_of(d)
+            if logical is not None:
+                self.hostmap.unbind(logical)
+            self.monitor.hosts.pop(d, None)
+        assignment = (tuple(rebalance_shards(self.n_shards, survivors))
+                      if self.n_shards is not None else None)
+        target = RestoreTarget(FailureAction.SHRINK, step=None,
+                               hosts=list(survivors), dead=list(dead),
+                               assignment=assignment)
+        self._recover(target)
+        if assignment is not None:
+            # the rewrite only transforms an *existing* logged
+            # DataReassign; a log that never rebalanced has none — read
+            # what replay actually applied and log the survivor
+            # assignment freshly if it didn't land
+            current = getattr(getattr(self.runner, "lower", None),
+                              "data_assignment", None)
+            self._assignment = (tuple(map(tuple, current))
+                                if current is not None else None)
+            self._apply_assignment(assignment, reason="shrink",
+                                   hosts=list(dead))
+        self._event("restored", action="shrink", step=target.step,
+                    hosts=list(survivors))
+        return target
+
+    def _do_restart(self, dead: List[int]) -> RestoreTarget:
+        """Classic C/R: the world keeps its geometry (dead hosts restart
+        in place — a rescheduled pod with the same logical rank), the
+        runner tears down and resumes through the Incarnation from the
+        latest restorable step."""
+        target = RestoreTarget(FailureAction.RESTART_LAST_CKPT, step=None,
+                               hosts=self.world, dead=list(dead),
+                               assignment=self._assignment)
+        self._recover(target)
+        self._event("restored", action="restart_last_ckpt",
+                    step=target.step, hosts=target.hosts)
+        return target
+
+    # --- execution helpers ----------------------------------------------
+
+    def _recover(self, target: RestoreTarget) -> None:
+        """The one recovery sequence both rebuilding policies share:
+        tear the runner down, quiesce in-flight snapshot writers,
+        repair degraded storage, resolve the restore step, rebuild the
+        runner through the caller's hook, and give every survivor a
+        fresh heartbeat grace period (the whole sequence blocked this
+        single thread — without the reset, a recovery longer than the
+        timeout would make the next poll declare healthy hosts dead).
+        Fills ``target.step`` and replaces ``self.runner``."""
+        self._teardown_runner()
+        self._quiesce()   # in-flight writers stop before repair copies
+        self._repair()
+        target.step = self._require_step()
+        self.runner = self._run_restore(target)
+        self._reset_heartbeats()
+
+    def _reset_heartbeats(self) -> None:
+        """Give every monitored host a fresh grace period: execution
+        blocked this thread, so nobody's beat could be ingested while a
+        decision (teardown + repair + restore) ran."""
+        now = self.clock()
+        for st in self.monitor.hosts.values():
+            st.last_heartbeat = now
+            st.alive = True
+
+    def _teardown_runner(self) -> None:
+        if self.runner is not None and self._teardown is not None:
+            self._teardown(self.runner)
+        self.runner = None
+
+    def _repair(self) -> None:
+        """Rebuild a degraded ShardedBackend from peer replicas before
+        the restore depends on it. Storage geometry is independent of
+        the compute world (the N virtual storage hosts are directories,
+        not processes), so repair always restores full redundancy and
+        re-admits the repaired hosts — a shrink changes who *computes*,
+        not where blobs live."""
+        if not self.repair_storage or self.manager is None:
+            return
+        backend = getattr(self.manager, "backend", None)
+        from repro.core.backends.sharded import ShardedBackend
+        if not isinstance(backend, ShardedBackend):
+            return
+        # cheap probe before the O(all blobs) sweep: a host death shows
+        # up as an injected writer failure or a missing host directory.
+        # Keeps the hot-spare path O(n_hosts) when storage survived —
+        # the common case the ~ms takeover MTTR is advertised on.
+        degraded = bool(backend._failed_hosts) or any(
+            not (backend.root / f"host_{h:03d}").is_dir()
+            for h in range(backend.n_hosts))
+        if not degraded:
+            return
+        from repro.core import replication
+        rep = replication.repair(backend)
+        if rep.restored or rep.unrecoverable:
+            self._event("storage_repair", restored=rep.restored,
+                        unrecoverable=len(rep.unrecoverable))
+        if rep.unrecoverable:
+            raise SupervisorError(
+                f"{len(rep.unrecoverable)} blob(s) lost every copy "
+                f"(first: {rep.unrecoverable[0]}); the latest "
+                "checkpoint(s) referencing them are not restorable")
+
+    def _require_step(self) -> int:
+        step = self.latest_restorable_step()
+        if step is None:
+            raise SupervisorError("no restorable checkpoint to resume "
+                                  "from (and the job is down)")
+        return step
+
+    def _run_restore(self, target: RestoreTarget) -> Any:
+        if self._restore is None:
+            raise SupervisorError(
+                f"decision {target.action.value} needs a restore hook "
+                "to rebuild the runner")
+        return self._restore(target)
+
+    def _apply_assignment(self, assignment, *, reason: str,
+                          hosts: List[int]):
+        assignment = tuple(map(tuple, assignment))
+        if assignment == self._assignment:
+            return assignment
+        self._assignment = assignment
+        if self._reassign is not None:
+            self._reassign(self.runner, assignment)
+        elif self.runner is not None and \
+                hasattr(self.runner, "apply_reassignment"):
+            self.runner.apply_reassignment(assignment)
+        self._event("reassign", reason=reason, hosts=hosts,
+                    assignment=assignment)
+        return assignment
+
+    # --- observability ----------------------------------------------------
+
+    def mttr(self) -> Dict[str, float]:
+        """Worst observed MTTR per executed action, in *wall* seconds —
+        the injected clock typically stands still while a decision
+        executes (it only ticks when the caller's loop runs), so
+        ``Incident.wall_s`` is the number that means anything here.
+        ``benchmarks/mttr.py`` additionally folds in the restored
+        runner's first step, which this accounting cannot see."""
+        out: Dict[str, float] = {}
+        for inc in self.incidents:
+            out[inc.action] = max(out.get(inc.action, 0.0), inc.wall_s)
+        return out

@@ -120,6 +120,64 @@ class HandleTable:
                     if g == self._generation]
 
 
+# --- host correspondence -----------------------------------------------------
+
+class HostMap:
+    """Logical host coordinate -> physical host rank, via the same
+    vid/handle indirection as every other unstable resource.
+
+    A multi-host job addresses its peers by *logical* rank (shard
+    ownership, collective neighbors, heartbeat identity). The physical
+    rank behind a logical host is exactly as unstable as a GLuint: a
+    hot-spare takeover rebinds the dead host's logical coordinate to the
+    spare's physical rank, and nothing holding the logical id notices —
+    the supervisor's failure loop (``core.supervisor``) drives these
+    rebinds. Translation goes through a ``HandleTable``, so a logical
+    host whose physical backing died and was never remapped raises
+    ``StaleHandleError`` instead of silently resolving to a corpse."""
+
+    def __init__(self, hosts) -> None:
+        self._table = HandleTable()
+        self._vids: Dict[int, VirtualId] = {
+            l: self._table.create("host", p) for l, p in enumerate(hosts)}
+
+    def logical_hosts(self) -> list:
+        return sorted(self._vids)
+
+    def vid(self, logical: int) -> VirtualId:
+        return self._vids[logical]
+
+    def physical(self, logical: int) -> int:
+        """Current physical rank behind a logical host (raises
+        StaleHandleError if it was unbound and never remapped)."""
+        return self._table.translate(self._vids[logical])
+
+    def physical_hosts(self) -> list:
+        """Physical ranks of every *bound* logical host, logical order."""
+        return [self._table.translate(v)
+                for l, v in sorted(self._vids.items())
+                if self._table.is_bound(v)]
+
+    def logical_of(self, physical: int) -> Optional[int]:
+        for l in sorted(self._vids):
+            v = self._vids[l]
+            if self._table.is_bound(v) and \
+                    self._table.translate(v) == physical:
+                return l
+        return None
+
+    def remap(self, logical: int, physical: int) -> VirtualId:
+        """Hot-spare takeover: the same logical coordinate now denotes a
+        different physical host; the vid is stable across the rebind."""
+        return self._table.bind(self._vids[logical], physical)
+
+    def unbind(self, logical: int) -> None:
+        """Shrink: the logical host leaves the world (its vid survives,
+        translating it raises until a future grow remaps it; ``bind``
+        re-adopts released vids, so ``remap`` can revive the slot)."""
+        self._table.release(self._vids[logical])
+
+
 # --- device correspondence ---------------------------------------------------
 
 class DeviceMap:

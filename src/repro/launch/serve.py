@@ -11,6 +11,15 @@ every ``--snapshot-every`` steps. ``--resume [latest|STEP]`` restores a
 killed server and finishes the interrupted requests; pass a different
 ``--slots`` to re-slot the sessions onto a larger or smaller engine
 (elastic serving restore).
+
+``--supervise`` (requires ``--ckpt-dir``) routes serving under a
+``ClusterSupervisor`` over a simulated ``--hosts``-host world: a host
+death (inject one with ``--kill-host H@STEP``) is detected after
+``--heartbeat-timeout`` silent ticks and the decision executes for
+real — hot-spare remaps the dead host to one of ``--spares``; shrink
+restores the live sessions onto proportionally fewer slots through the
+elastic re-slot path; restart resumes every session from the last
+snapshot. In-flight generations continue token-identically.
 """
 from __future__ import annotations
 
@@ -22,7 +31,10 @@ import jax
 import numpy as np
 
 from repro.configs import registry as cfg_registry
-from repro.core import CheckpointManager, make_backend
+from repro.core import (CheckpointManager, ClusterSupervisor,
+                        make_backend)
+from repro.launch.supervise import (SimWorldDriver, add_supervise_args,
+                                    parse_supervise_args)
 from repro.models import model as M
 from repro.serving.engine import Request, ServingEngine
 
@@ -49,7 +61,17 @@ def main(argv=None) -> int:
                          "'latest' (the bare flag) or a step number; "
                          "--slots may differ from the checkpoint "
                          "(elastic re-slotting)")
+    add_supervise_args(ap, unit="engine step")
     args = ap.parse_args(argv)
+
+    kill, err = parse_supervise_args(args, "serve")
+    if err is not None:
+        print(err, file=sys.stderr)
+        return 2
+    if args.supervise and not args.ckpt_dir:
+        print("[serve] --supervise needs --ckpt-dir (restarts resume "
+              "from snapshots)", file=sys.stderr)
+        return 2
 
     # validate the cheap stuff before paying jax init + param build
     resume_step = None
@@ -121,8 +143,12 @@ def main(argv=None) -> int:
     # process's throughput — only what the drain below produces does
     already = sum(len(r.out) for r in reqs)
     t0 = time.monotonic()
-    eng.run_until_drained(
-        snapshot_every=args.snapshot_every if mgr is not None else None)
+    if args.supervise:
+        eng, reg = _run_supervised(args, mgr, eng, params, kill)
+        reqs = sorted(reg.values(), key=lambda r: r.rid)
+    else:
+        eng.run_until_drained(
+            snapshot_every=args.snapshot_every if mgr is not None else None)
     dt = time.monotonic() - t0
     toks = sum(len(r.out) for r in reqs) - already
     print(f"[serve] {len(reqs)} requests, {toks} tokens in {dt:.2f}s "
@@ -131,6 +157,54 @@ def main(argv=None) -> int:
     for r in reqs:
         print(f"  rid={r.rid} out={r.out}")
     return 0
+
+
+def _run_supervised(args, mgr, eng, params, kill, max_steps: int = 10_000):
+    """Drain the engine under the failure loop: one virtual-clock tick
+    per engine step; a detected death swaps the engine under us (shrink
+    restores the live sessions onto proportionally fewer slots through
+    the elastic re-slot path). Returns the final engine and the latest
+    Request object seen per rid — finished or restored, the newest
+    object holds the request's authoritative output."""
+    world = list(range(args.hosts))
+    spares = list(range(args.hosts, args.hosts + args.spares))
+    driver = SimWorldDriver(kill)
+
+    def restore(target):
+        # ceiling division: losing 1 of 4 hosts must not halve a
+        # 2-slot engine — capacity shrinks proportionally, rounded up
+        n_slots = max(1, -(-args.slots * len(target.hosts) // args.hosts))
+        e = ServingEngine.restore(mgr, params, n_slots=n_slots,
+                                  step=target.step)
+        print(f"[supervisor] restored {len(e.live_requests())} live "
+              f"sessions on {e.n_slots} slots at engine step {e.steps}")
+        return e
+
+    sup = ClusterSupervisor(
+        world, manager=mgr, spares=spares,
+        heartbeat_timeout=args.heartbeat_timeout,
+        clock=driver.clock, allow_shrink=not args.no_shrink,
+        restore=restore, runner=eng)
+    driver.attach(sup)
+    if mgr.backend.latest_step() is None:
+        eng.snapshot(block=True)   # baseline: a death before the first
+        # --snapshot-every commit still has a restore target (a resumed
+        # engine already has one — don't overwrite its manifest)
+    reg = {}
+    while max_steps > 0:
+        eng = sup.runner
+        for r in eng.live_requests():
+            reg[r.rid] = r
+        if not (eng.queue or any(eng.slot_req)):
+            break
+        eng.step()
+        max_steps -= 1
+        if args.snapshot_every and eng.steps % args.snapshot_every == 0:
+            eng.snapshot()
+        driver.tick(eng.steps)
+    driver.warn_if_kill_pending()
+    mgr.wait()
+    return sup.runner, reg
 
 
 if __name__ == "__main__":

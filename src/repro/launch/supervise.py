@@ -1,0 +1,126 @@
+"""Shared --supervise surface for the launchers.
+
+Both entry points (train, serve) route their run under a
+``ClusterSupervisor`` with the same knobs and the same simulated-world
+mechanics; this module is the single definition of the flags, their
+validation, and the world driver (virtual clock, heartbeat fan-out
+with the injected kill excluded, one poll per tick) — so none of it
+can drift between the two. Only the runner-specific step/restore logic
+stays in each launcher.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional, Tuple
+
+
+def add_supervise_args(ap: argparse.ArgumentParser,
+                       unit: str = "step") -> None:
+    """``unit`` names the simulated clock tick in help text ("step" for
+    training, "engine step" for serving)."""
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under a ClusterSupervisor (detect -> "
+                         "decide -> restore) over a simulated world")
+    # world-shape flags default to None so "explicitly set but
+    # --supervise forgotten" is distinguishable from "left alone" —
+    # parse_supervise_args rejects the former and fills the defaults in
+    ap.add_argument("--hosts", type=int, default=None,
+                    help="simulated world size under --supervise "
+                         "(default 2)")
+    ap.add_argument("--spares", type=int, default=0,
+                    help="idle spare hosts the hot-spare policy may use")
+    ap.add_argument("--heartbeat-timeout", type=float, default=None,
+                    help="ticks of heartbeat silence before a host is "
+                         f"declared dead (one tick per {unit}; "
+                         "default 3)")
+    ap.add_argument("--no-shrink", action="store_true",
+                    help="forbid elastic shrink: a death with no spare "
+                         "restarts from the last checkpoint")
+    ap.add_argument("--kill-host", default=None, metavar="H@STEP",
+                    help=f"fault injection: host H stops heartbeating "
+                         f"at {unit} STEP (needs --supervise)")
+
+
+def parse_supervise_args(args, prog: str
+                         ) -> Tuple[Optional[Tuple[int, int]],
+                                    Optional[str]]:
+    """-> (kill, error). ``kill`` is the parsed (host, step) injection
+    or None; a non-None ``error`` is the message the launcher should
+    print before exiting 2. Also normalizes the None-sentinel defaults
+    of --hosts/--heartbeat-timeout."""
+    if not args.supervise and (args.kill_host is not None or args.spares
+                               or args.no_shrink
+                               or args.hosts is not None
+                               or args.heartbeat_timeout is not None):
+        return None, (f"[{prog}] --hosts/--spares/--heartbeat-timeout/"
+                      "--no-shrink/--kill-host only make sense under "
+                      "--supervise (nothing would watch the heartbeats)")
+    if args.hosts is None:
+        args.hosts = 2
+    if args.heartbeat_timeout is None:
+        args.heartbeat_timeout = 3.0
+    if args.kill_host is None:
+        return None, None
+    try:
+        h, s = args.kill_host.split("@")
+        kill = (int(h), int(s))
+    except ValueError:
+        return None, (f"[{prog}] --kill-host: expected H@STEP, got "
+                      f"{args.kill_host!r}")
+    if not 0 <= kill[0] < args.hosts:
+        # an out-of-world host would silently never die — the user
+        # would believe the failure path was exercised when it wasn't
+        return None, (f"[{prog}] --kill-host: host {kill[0]} is not in "
+                      f"the simulated world 0..{args.hosts - 1}")
+    return kill, None
+
+
+class SimWorldDriver:
+    """The simulated world around a supervised run: one virtual-clock
+    tick per step, every live host heartbeats (the injected kill stays
+    silent from its step on), then one supervisor poll. Construct the
+    driver first, hand ``driver.clock`` to the ClusterSupervisor, then
+    ``attach`` it."""
+
+    def __init__(self, kill: Optional[Tuple[int, int]]) -> None:
+        self.kill = kill
+        self.sup = None
+        self._t = 0.0
+
+    def clock(self) -> float:
+        return self._t
+
+    def attach(self, sup) -> "SimWorldDriver":
+        self.sup = sup
+        return self
+
+    def tick(self, step: int):
+        """Advance the world one step; returns the executed decision's
+        RestoreTarget (None when nothing died). An executed incident
+        clears the kill — it is resolved, whichever policy ran."""
+        self._t += 1.0
+        for h in self.sup.world:
+            if self.kill is not None and h == self.kill[0] \
+                    and step >= self.kill[1]:
+                continue
+            self.sup.beat(h, step)
+        target = self.sup.poll()
+        if target is not None:
+            print(f"[supervisor] {target.action.value}: dead="
+                  f"{target.dead} -> hosts={target.hosts} "
+                  f"(mttr {self.sup.incidents[-1].wall_s:.2f}s)")
+            self.kill = None
+        return target
+
+    def warn_if_kill_pending(self) -> None:
+        """Call after the run's loop: a --kill-host that never produced
+        an incident (run ended before the silence crossed the timeout)
+        must be said out loud, or the user believes the failure path
+        was exercised when it wasn't."""
+        if self.kill is not None:
+            print(f"[supervisor] WARNING: --kill-host "
+                  f"{self.kill[0]}@{self.kill[1]} never triggered an "
+                  f"incident — the run ended before the death could be "
+                  f"detected (raise --steps or lower "
+                  f"--heartbeat-timeout)", file=sys.stderr)

@@ -10,6 +10,19 @@ Re-running the identical command after a kill continues bitwise from the
 last committed checkpoint. ``--resume [latest|STEP]`` makes the intent
 explicit: it *requires* a restorable checkpoint (and can pick a specific
 step), where the default behavior silently falls back to a cold start.
+
+``--supervise`` closes the failure loop in-process: the run is routed
+under a ``ClusterSupervisor`` over a simulated ``--hosts``-host world
+(deterministic virtual clock, one tick per step) with ``--spares`` idle
+hosts and ``--heartbeat-timeout`` ticks of silence meaning death.
+``--kill-host H@STEP`` injects a host death mid-run; the supervisor
+detects it, decides (hot-spare > shrink > restart-last-ckpt), and
+executes the decision end-to-end — storage repair, Incarnation restore,
+logged shard rebalance — then training continues:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b-smoke \
+      --steps 20 --ckpt-dir /tmp/job1 --backend sharded \
+      --supervise --hosts 4 --spares 1 --kill-host 2@8
 """
 from __future__ import annotations
 
@@ -18,7 +31,10 @@ import sys
 
 import jax
 
-from repro.core import CheckpointManager, make_backend
+from repro.core import (CheckpointManager, ClusterSupervisor,
+                        FailureAction, make_backend)
+from repro.launch.supervise import (SimWorldDriver, add_supervise_args,
+                                    parse_supervise_args)
 from repro.train.loop import Trainer, TrainJob
 
 
@@ -42,7 +58,13 @@ def main(argv=None) -> int:
                     help="resume from a checkpoint: 'latest' (the bare "
                          "flag) or a step number; fails instead of "
                          "cold-starting when none is restorable")
+    add_supervise_args(ap)
     args = ap.parse_args(argv)
+
+    kill, err = parse_supervise_args(args, "launch")
+    if err is not None:
+        print(err, file=sys.stderr)
+        return 2
 
     n_dev = len(jax.devices())
     d = args.data_mesh or (n_dev // args.model_mesh)
@@ -87,17 +109,67 @@ def main(argv=None) -> int:
         print(f"[launch] COLD START {args.arch} on mesh "
               f"({d},{args.model_mesh})")
 
-    start = int(tr.upper.get("step"))
-    for step in range(start, args.steps):
-        m = tr.train_steps(1)
-        print(f"step {m['step']:5.0f} loss {m['loss']:.4f} "
-              f"lr {m['lr']:.2e}", flush=True)
-        if (step + 1) % args.ckpt_every == 0 or step + 1 == args.steps:
-            tr.save(block=False)
+    if args.supervise:
+        tr = _run_supervised(args, mgr, tr, kill)
+    else:
+        start = int(tr.upper.get("step"))
+        for step in range(start, args.steps):
+            m = tr.train_steps(1)
+            print(f"step {m['step']:5.0f} loss {m['loss']:.4f} "
+                  f"lr {m['lr']:.2e}", flush=True)
+            if (step + 1) % args.ckpt_every == 0 or step + 1 == args.steps:
+                tr.save(block=False)
     mgr.wait()
     print(f"[launch] done at step {int(tr.upper.get('step'))}; "
           f"checkpoints: {mgr.backend.list_steps()}")
     return 0
+
+
+def _run_supervised(args, mgr, tr, kill):
+    """The failure loop around the step loop: every step is one tick of
+    the simulated world's clock; live hosts heartbeat, the supervisor
+    polls, and an executed decision swaps the runner under us (the
+    restored trainer resumes from the last committed step — the
+    crash-loop contract, but automated)."""
+    world = list(range(args.hosts))
+    spares = list(range(args.hosts, args.hosts + args.spares))
+    driver = SimWorldDriver(kill)
+
+    def restore(target):
+        t = Trainer.restore(mgr, step=target.step,
+                            rewrite_op=target.rewrite_op())
+        print(f"[supervisor] restored at step "
+              f"{int(t.upper.get('step'))} on hosts {target.hosts}")
+        return t
+
+    sup = ClusterSupervisor(
+        world, manager=mgr, spares=spares,
+        heartbeat_timeout=args.heartbeat_timeout,
+        clock=driver.clock, n_shards=tr.shape.global_batch,
+        allow_shrink=not args.no_shrink,
+        restore=restore, runner=tr)
+    driver.attach(sup)
+    if mgr.backend.latest_step() is None:
+        tr.save(block=True)   # baseline: a death before the first
+        # --ckpt-every commit still has a restore target
+    step = int(tr.upper.get("step"))
+    while step < args.steps:
+        tr = sup.runner
+        m = tr.train_steps(1)
+        step = int(tr.upper.get("step"))
+        print(f"step {m['step']:5.0f} loss {m['loss']:.4f} "
+              f"hosts {sup.world}", flush=True)
+        if step % args.ckpt_every == 0 or step == args.steps:
+            tr.save(block=False)
+        target = driver.tick(step)
+        if target is not None \
+                and target.action is not FailureAction.HOT_SPARE:
+            step = int(sup.runner.upper.get("step"))  # rolled back
+    driver.warn_if_kill_pending()
+    for inc in sup.incidents:
+        print(f"[supervisor] incident {inc.action}: dead={inc.dead} "
+              f"step={inc.step} mttr={inc.wall_s:.2f}s")
+    return sup.runner
 
 
 if __name__ == "__main__":

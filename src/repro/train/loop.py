@@ -172,6 +172,17 @@ class Trainer:
                                  self.lower.oplog, block=False,
                                  job_meta=self.job_meta())
 
+    def apply_reassignment(self, assignment) -> None:
+        """Move data-shard ownership between hosts, as one *logged*
+        operation: the DataReassign goes through the lower half (so a
+        later restart replays it — the supervisor's hot-spare and
+        straggler rebalances survive crashes) and the live pipeline
+        adopts it immediately. Batch contents are unchanged — shard
+        layout is a data constant, ownership is topology — so training
+        stays token-identical across any reassignment."""
+        self.lower.data_reassign(assignment)
+        self.pipeline.reassign(list(map(tuple, assignment)))
+
     def train(self, n_steps: int, snapshot_every: Optional[int] = None,
               ) -> Dict[str, float]:
         """Step loop with overlapped checkpointing: snapshots are
@@ -190,14 +201,22 @@ class Trainer:
     def restore(cls, manager: CheckpointManager,
                 mesh_factory: Optional[Callable] = None,
                 step: Optional[int] = None,
-                decode_workers: Optional[int] = None) -> "Trainer":
+                decode_workers: Optional[int] = None,
+                rewrite_op: Optional[Callable] = None) -> "Trainer":
         """Resume through the Incarnation lifecycle: materialize the
         delta chain (parallel leaf decode), fresh lower half + op-log
         replay (recompile, reapply runtime ops), rebind the upper half
         onto the — possibly different — mesh. Phase timings land on
-        ``trainer.incarnation.timings``."""
+        ``trainer.incarnation.timings``.
+
+        ``rewrite_op`` transforms logged ops before replay — the
+        elastic re-shard path: a supervisor SHRINK restore rewrites the
+        logged DataReassign onto the surviving hosts' assignment
+        (``RestoreTarget.rewrite_op``), the training twin of serving's
+        re-slot rewrite."""
         inc = Incarnation(manager, step=step, mesh_factory=mesh_factory,
-                          decode_workers=decode_workers)
+                          decode_workers=decode_workers,
+                          rewrite_op=rewrite_op)
         inc.materialize()
         jm = inc.job
         job = TrainJob(arch=jm["arch"], shape_key=jm["shape_key"],

@@ -1,0 +1,121 @@
+"""The launchers' --supervise surface: flag validation, the shared
+SimWorldDriver mechanics, and (slow) one end-to-end supervised train
+CLI run — so a regression in the glue between argparse and
+ClusterSupervisor can't ship silently."""
+import argparse
+
+import pytest
+
+from repro.launch.supervise import (SimWorldDriver, add_supervise_args,
+                                    parse_supervise_args)
+
+
+def _parse(argv):
+    ap = argparse.ArgumentParser()
+    add_supervise_args(ap)
+    return ap.parse_args(argv)
+
+
+# --- flag validation ---------------------------------------------------------
+
+def test_defaults_fill_in_under_supervise():
+    args = _parse(["--supervise"])
+    kill, err = parse_supervise_args(args, "t")
+    assert err is None and kill is None
+    assert args.hosts == 2 and args.heartbeat_timeout == 3.0
+
+
+def test_kill_host_parses_and_validates_world():
+    args = _parse(["--supervise", "--hosts", "4", "--kill-host", "2@8"])
+    kill, err = parse_supervise_args(args, "t")
+    assert err is None and kill == (2, 8)
+
+    args = _parse(["--supervise", "--hosts", "4", "--kill-host", "4@8"])
+    kill, err = parse_supervise_args(args, "t")
+    assert kill is None and "not in the simulated world" in err
+
+    args = _parse(["--supervise", "--kill-host", "nope"])
+    kill, err = parse_supervise_args(args, "t")
+    assert kill is None and "expected H@STEP" in err
+
+
+@pytest.mark.parametrize("argv", [
+    ["--kill-host", "1@2"], ["--spares", "1"], ["--no-shrink"],
+    ["--hosts", "8"], ["--heartbeat-timeout", "1"],
+])
+def test_supervise_flags_without_supervise_rejected(argv):
+    kill, err = parse_supervise_args(_parse(argv), "t")
+    assert kill is None
+    assert err is not None and "--supervise" in err
+
+
+# --- the world driver --------------------------------------------------------
+
+class _FakeSup:
+    """Just enough ClusterSupervisor surface for the driver."""
+
+    def __init__(self, world):
+        self.world = list(world)
+        self.beats = []
+        self.poll_results = []
+        self.incidents = []
+
+    def beat(self, host, step):
+        self.beats.append((host, step))
+
+    def poll(self):
+        return self.poll_results.pop(0) if self.poll_results else None
+
+
+def test_driver_excludes_killed_host_from_its_step_on():
+    sup = _FakeSup([0, 1, 2])
+    d = SimWorldDriver(kill=(1, 5)).attach(sup)
+    assert d.tick(4) is None
+    assert d.tick(5) is None
+    assert (1, 4) in sup.beats and (1, 5) not in sup.beats
+    assert (0, 5) in sup.beats and (2, 5) in sup.beats
+    assert d.clock() == 2.0                       # one tick per step
+
+
+def test_driver_clears_kill_after_incident(capsys):
+    class _T:
+        class action:
+            value = "shrink"
+        dead = [1]
+        hosts = [0, 2]
+
+    class _I:
+        wall_s = 0.5
+
+    sup = _FakeSup([0, 1, 2])
+    sup.poll_results = [_T()]
+    sup.incidents = [_I()]
+    d = SimWorldDriver(kill=(1, 0)).attach(sup)
+    assert d.tick(1) is not None
+    assert d.kill is None
+    d.warn_if_kill_pending()                      # resolved: no warning
+    assert "WARNING" not in capsys.readouterr().err
+
+
+def test_driver_warns_when_kill_never_fires(capsys):
+    d = SimWorldDriver(kill=(1, 99)).attach(_FakeSup([0, 1]))
+    d.tick(1)
+    d.warn_if_kill_pending()
+    assert "never triggered an incident" in capsys.readouterr().err
+
+
+# --- end-to-end CLI (slow: trains a smoke model in-process) ------------------
+
+@pytest.mark.slow
+def test_train_cli_supervised_shrink_end_to_end(tmp_path, capsys):
+    """The full --supervise surface through the real entry point: an
+    injected death shrinks the world mid-run and the job finishes."""
+    from repro.launch.train import main
+    rc = main(["--arch", "starcoder2-3b-smoke", "--steps", "8",
+               "--ckpt-every", "2", "--ckpt-dir", str(tmp_path),
+               "--backend", "sharded", "--supervise", "--hosts", "4",
+               "--kill-host", "1@3"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "shrink: dead=[1]" in out
+    assert "done at step 8" in out

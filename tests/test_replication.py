@@ -1,0 +1,167 @@
+"""core.replication: peer-replica repair of a lost ShardedBackend host,
+and the coordinator's loud-commit contract (a manifest referencing lost
+writes is refused, never published silently partial)."""
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointManager, Incarnation, OpLog,
+                        ShardedBackend, UpperHalf, replication)
+from repro.core.backends.sharded import _host_of
+
+
+def _mk_upper(seed=0, n=60_000):
+    rng = np.random.RandomState(seed)
+    up = UpperHalf()
+    up.register("params", "params",
+                {"w": rng.randn(n).astype(np.float32),
+                 "b": rng.randn(256).astype(np.float32)})
+    up.register("step", "step", np.int64(seed))
+    return up
+
+
+def _blob_census(be: ShardedBackend):
+    """{host: set(blob filenames)} across the store."""
+    out = {}
+    for h in range(be.n_hosts):
+        d = be.root / f"host_{h:03d}"
+        out[h] = set(p.name for p in d.iterdir()) if d.is_dir() else set()
+    return out
+
+
+# --- repair ------------------------------------------------------------------
+
+def test_repair_rebuilds_lost_host_from_peers(tmp_path):
+    """fail_host(h) + delete host_h's directory: repair() restores every
+    blob the host held — owned primaries from the (h+1)%N replicas,
+    held replicas from the (h-1)%N primaries — byte-identically."""
+    be = ShardedBackend(str(tmp_path), n_hosts=4, replicate=True)
+    mgr = CheckpointManager(be, async_save=False)
+    up = _mk_upper(1)
+    mgr.save(1, up, OpLog())
+    before = _blob_census(be)
+    lost = 2
+    assert before[lost], "host 2 must own something for the test to bite"
+    data_before = {name: (be.root / f"host_{lost:03d}" / name).read_bytes()
+                   for name in before[lost]}
+
+    be.fail_host(lost)
+    shutil.rmtree(be.root / f"host_{lost:03d}")
+
+    rep = replication.repair(be, host=lost)
+    assert rep.restored == len(before[lost])
+    assert not rep.unrecoverable
+    after = _blob_census(be)
+    assert after == before
+    for name, want in data_before.items():
+        got = (be.root / f"host_{lost:03d}" / name).read_bytes()
+        assert got == want
+    # healed: reads hit the primary again, and a fresh scan is clean
+    assert lost not in be._failed_hosts
+    assert not replication.scan(be).degraded
+
+
+def test_repair_then_incarnation_restore(tmp_path):
+    """The supervisor's sequence: lose a host wholesale, repair from
+    peers, then a full Incarnation restore over the repaired store
+    succeeds bit-identically (replicate=True)."""
+    be = ShardedBackend(str(tmp_path), n_hosts=3, replicate=True)
+    mgr = CheckpointManager(be, async_save=False)
+    up = _mk_upper(2)
+    want = np.array(up.get("params")["w"])
+    mgr.save(5, up, OpLog())
+
+    be.fail_host(0)
+    shutil.rmtree(be.root / "host_000")
+    replication.repair(be, host=0)
+
+    inc = Incarnation(mgr)
+    state = inc.materialize()
+    np.testing.assert_array_equal(state.entries["params"]["['w']"], want)
+    assert int(inc.scalar("step")) == 2
+
+
+def test_scan_reports_degradation_and_unrecoverable(tmp_path):
+    """scan() is read-only truth: missing copies are counted, a blob
+    with no surviving copy is named, and repair() reports (not hides)
+    the unrecoverable ones."""
+    be = ShardedBackend(str(tmp_path), n_hosts=4, replicate=True)
+    mgr = CheckpointManager(be, async_save=False)
+    mgr.save(1, _mk_upper(3), OpLog())
+    assert not replication.scan(be).degraded
+
+    # delete one primary: degraded but recoverable
+    census = _blob_census(be)
+    h, name = next((h, n) for h, names in census.items()
+                   for n in names if not n.startswith("replica_"))
+    (be.root / f"host_{h:03d}" / name).unlink()
+    rep = replication.scan(be)
+    assert rep.missing_primaries == 1 and not rep.unrecoverable
+
+    # delete its replica too: unrecoverable, and repair says so
+    r = (h + 1) % be.n_hosts
+    (be.root / f"host_{r:03d}" / f"replica_{name}").unlink()
+    rep = replication.repair(be)
+    assert rep.unrecoverable == [name]
+
+
+def test_repair_without_replication_cannot_invent_data(tmp_path):
+    """replicate=False: a lost host's blobs have no peer copy — repair
+    reports every one unrecoverable instead of pretending."""
+    be = ShardedBackend(str(tmp_path), n_hosts=3, replicate=False)
+    mgr = CheckpointManager(be, async_save=False)
+    mgr.save(1, _mk_upper(4), OpLog())
+    lost_names = _blob_census(be)[1]
+    assert lost_names
+    shutil.rmtree(be.root / "host_001")
+    rep = replication.repair(be, host=1)
+    assert set(rep.unrecoverable) == lost_names
+    assert rep.restored == 0
+
+
+# --- loud commit -------------------------------------------------------------
+
+def test_commit_refuses_manifest_with_lost_writes(tmp_path):
+    """The regression the docstring promised: if a host's writes were
+    lost between blob write and manifest commit, the coordinator must
+    refuse the commit — the store keeps its previous 'latest', never a
+    checkpoint it cannot serve."""
+    be = ShardedBackend(str(tmp_path), n_hosts=4, replicate=False)
+    mgr = CheckpointManager(be, async_save=False)
+    mgr.save(1, _mk_upper(5), OpLog())
+
+    m = be.get_manifest(1)
+    # simulate losing one referenced blob's host directory wholesale
+    from repro.core.delta import referenced_hashes
+    name = sorted(referenced_hashes(m))[0]
+    shutil.rmtree(be.root / f"host_{_host_of(name, be.n_hosts):03d}")
+    with pytest.raises(RuntimeError, match="unservable"):
+        be.commit_manifest(2, m)
+    assert be.list_steps() == [1]        # nothing partial published
+
+
+def test_put_blob_to_down_host_raises(tmp_path):
+    """A down host's writer cannot 'succeed': the write is lost and the
+    pipeline must hear about it before the manifest publishes."""
+    be = ShardedBackend(str(tmp_path), n_hosts=2, replicate=False)
+    name = "aaaa"                        # find a name owned by host 1
+    while _host_of(name, 2) != 1:
+        name += "a"
+    be.fail_host(1)
+    with pytest.raises(IOError, match="host 1 down"):
+        be.put_blob(name, b"payload")
+    be.heal_host(1)
+    be.put_blob(name, b"payload")        # healed writer lands it
+    assert be.get_blob(name) == b"payload"
+
+
+def test_save_through_manager_fails_loudly_on_down_host(tmp_path):
+    """End-to-end: a snapshot through the async pipeline with a down
+    (unreplicated) host raises at save time and publishes nothing."""
+    be = ShardedBackend(str(tmp_path), n_hosts=2, replicate=False)
+    mgr = CheckpointManager(be, async_save=False)
+    be.fail_host(1)
+    with pytest.raises(IOError, match="down"):
+        mgr.save(1, _mk_upper(6), OpLog())
+    assert be.list_steps() == []

@@ -1,0 +1,470 @@
+"""ClusterSupervisor: the failure loop EXECUTED, not just decided.
+
+Each policy test injects a real host death into a simulated world
+(injectable clock — silence past the timeout is death), lets the
+supervisor run detect → decide → execute, and then verifies the
+continuation is token-identical to an uninterrupted run:
+
+  restart_last_ckpt — teardown + storage repair + Incarnation restore
+                      from the latest restorable step;
+  hot_spare         — HostMap vid rebind to the spare + a *logged*
+                      DataReassign (no restore at all);
+  shrink            — elastic restore onto the survivors with the
+                      logged DataReassign rewritten during replay
+                      (RestoreTarget.rewrite_op).
+
+Plus: straggler feedback triggers a logged rebalance, and a world with
+no restorable checkpoint fails loudly instead of limping.
+"""
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointManager, ClusterSupervisor, FailureAction,
+                        LocalFSBackend, ShardedBackend, StaleHandleError,
+                        SupervisorError, rebalance_shards)
+from repro.core.oplog import DataReassign
+from repro.train.loop import Trainer, TrainJob
+
+JOB = TrainJob(arch="starcoder2-3b-smoke", shape_key="train_s32_b4")
+STEPS = 5
+
+
+def _run_reference():
+    t = Trainer(JOB, (1, 1), ("data", "model"))
+    t.init_state()
+    for _ in range(STEPS):
+        m = t.train_steps(1)
+    return t.params_digest(), m
+
+
+@pytest.fixture(scope="module")
+def reference():
+    return _run_reference()
+
+
+class _World:
+    """Deterministic heartbeat driver: one virtual-clock tick per step;
+    hosts in ``down`` stay silent and die of timeout."""
+
+    def __init__(self):
+        self._t = 0.0
+        self.down = set()
+        self.sup = None
+
+    def clock(self) -> float:
+        return self._t
+
+    def tick(self, step: int) -> None:
+        self._t += 1.0
+        for h in self.sup.world:
+            if h not in self.down:
+                self.sup.beat(h, step)
+
+
+def _make(world_hosts, mgr, runner, *, spares=(), allow_shrink=True,
+          restore=None, n_shards=4, timeout=3.0):
+    w = _World()
+    sup = ClusterSupervisor(
+        list(world_hosts), manager=mgr, spares=list(spares),
+        heartbeat_timeout=timeout, clock=w.clock,
+        allow_shrink=allow_shrink, n_shards=n_shards,
+        restore=restore, runner=runner)
+    w.sup = sup
+    return sup, w
+
+
+def _drive_to_death(sup, w, dead_host, step, ticks=6):
+    """Heartbeat a few healthy rounds, then silence ``dead_host`` until
+    the monitor flags it."""
+    for _ in range(2):
+        w.tick(step)
+    assert sup.poll() is None
+    w.down.add(dead_host)
+    for _ in range(ticks):
+        w.tick(step)
+    return sup.poll()
+
+
+# --- restart_last_ckpt -------------------------------------------------------
+
+def test_restart_policy_token_identical(tmp_path, reference):
+    """Host death with no spares and shrink forbidden: the supervisor
+    tears the job down, repairs the degraded sharded store from peer
+    replicas (the dead host's directory is really deleted), restores
+    through the Incarnation from the latest committed step, and the
+    continuation is bitwise-identical to the uninterrupted run."""
+    ref_digest, ref_metrics = reference
+    be = ShardedBackend(str(tmp_path), n_hosts=4, replicate=True)
+    mgr = CheckpointManager(be, async_save=False)
+    tr = Trainer(JOB, (1, 1), ("data", "model"), manager=mgr)
+    tr.init_state()
+    # the RUNNER's own (uneven) reassignment, logged before the crash:
+    # a restart keeps the world's geometry, so it must replay verbatim —
+    # never be rewritten to some synthetic even layout
+    custom = ((3, 0), (3, 1), (0, 2), (0, 3))
+    tr.apply_reassignment(custom)
+    tr.train_steps(2)
+    tr.save(block=True)
+    tr.train_steps(1)           # uncommitted progress, lost in the crash
+
+    def restore(target):
+        assert target.action is FailureAction.RESTART_LAST_CKPT
+        assert target.step == 2
+        assert target.rewrite_op() is None   # nothing to rewrite: the
+        return Trainer.restore(mgr, step=target.step,   # log is truth
+                               rewrite_op=target.rewrite_op())
+
+    sup, w = _make([0, 1, 2, 3], mgr, tr, allow_shrink=False,
+                   restore=restore)
+    # the death takes the host's storage with it
+    shutil.rmtree(be.root / "host_001")
+    be.fail_host(1)
+    target = _drive_to_death(sup, w, dead_host=1, step=3)
+
+    assert target.action is FailureAction.RESTART_LAST_CKPT
+    t2 = sup.runner
+    assert t2 is not tr
+    assert int(t2.upper.get("step")) == 2
+    assert t2.lower.data_assignment == custom   # replayed, not rewritten
+    m = {}
+    for _ in range(STEPS - 2):
+        m = t2.train_steps(1)
+    assert t2.params_digest() == ref_digest
+    assert np.isclose(m["loss"], ref_metrics["loss"])
+    assert sup.mttr().get("restart_last_ckpt", -1.0) >= 0.0
+    # repair really ran: full redundancy is back on the lost host
+    from repro.core import replication
+    assert not replication.scan(be).degraded
+
+
+def test_restart_without_checkpoint_fails_loudly(tmp_path):
+    """A death with nothing restorable must raise, not silently lose
+    the job."""
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False)
+    sup, w = _make([0, 1], mgr, object(), allow_shrink=False,
+                   restore=lambda t: pytest.fail("must not restore"))
+    w.down.add(1)
+    for _ in range(6):
+        w.tick(0)
+    with pytest.raises(SupervisorError, match="no restorable"):
+        sup.poll()
+
+
+def test_last_host_death_restarts_not_shrinks(tmp_path):
+    """Death of the only host leaves nobody to shrink onto: the policy
+    must fall through to restart-in-place, never divide by zero."""
+    from repro.core import FailurePolicy
+    action, info = FailurePolicy(allow_shrink=True).decide([0], world=[0])
+    assert action is FailureAction.RESTART_LAST_CKPT, (action, info)
+
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False)
+    tr = Trainer(JOB, (1, 1), ("data", "model"), manager=mgr)
+    tr.init_state()
+    tr.save(block=True)
+    restored = []
+
+    def restore(target):
+        assert target.action is FailureAction.RESTART_LAST_CKPT
+        restored.append(target.step)
+        return Trainer.restore(mgr, step=target.step)
+
+    sup, w = _make([0], mgr, tr, restore=restore)
+    target = _drive_to_death(sup, w, dead_host=0, step=0)
+    assert target.action is FailureAction.RESTART_LAST_CKPT
+    assert restored == [0]
+
+
+# --- hot_spare ---------------------------------------------------------------
+
+def test_hot_spare_policy_token_identical(tmp_path, reference):
+    """With a spare available the job never rolls back: the dead host's
+    logical coordinate rebinds to the spare (same vid), a rebalanced
+    DataReassign is logged through the live runner, and training
+    continues token-identically on the remapped world."""
+    ref_digest, _ = reference
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False)
+    tr = Trainer(JOB, (1, 1), ("data", "model"), manager=mgr)
+    tr.init_state()
+    tr.train_steps(2)
+    tr.save(block=True)
+
+    sup, w = _make([0, 1, 2, 3], mgr, tr, spares=[7],
+                   restore=lambda t: pytest.fail("hot spare must not "
+                                                 "restore"))
+    target = _drive_to_death(sup, w, dead_host=1, step=2)
+
+    assert target.action is FailureAction.HOT_SPARE
+    assert target.mapping == {1: 7}
+    assert sup.runner is tr                      # same live process
+    assert sup.world == [0, 7, 2, 3]             # logical order kept
+    assert sup.hostmap.physical(1) == 7          # vid rebound, not new
+    assert sup.policy.spares == []               # spare consumed
+    assert 7 in sup.monitor.hosts and 1 not in sup.monitor.hosts
+    # the rebalance is LOGGED (replays after any later restart) and live
+    reassigns = [op for op in tr.lower.oplog.ops
+                 if isinstance(op, DataReassign)]
+    assert reassigns and reassigns[-1].assignment == \
+        tuple(rebalance_shards(4, [0, 7, 2, 3]))
+    assert tr.pipeline.assignment == list(reassigns[-1].assignment)
+
+    for _ in range(STEPS - 2):
+        tr.train_steps(1)
+    assert tr.params_digest() == ref_digest
+
+    # and the logged decision survives a plain restart: a later
+    # checkpoint of this incarnation carries the reassignment forward
+    tr.save(block=True)
+    t2 = Trainer.restore(mgr)
+    assert t2.lower.data_assignment == reassigns[-1].assignment
+    assert t2.pipeline.assignment == list(reassigns[-1].assignment)
+
+
+def test_recovery_absorbs_casualty_snapshot_failure(tmp_path):
+    """An async snapshot whose writer died WITH the host raises out of
+    the pipeline's drain; recovery must absorb that casualty (it IS the
+    incident) and restore from the last committed step — not crash on
+    the very error it exists to handle."""
+    be = ShardedBackend(str(tmp_path), n_hosts=2, replicate=True)
+    mgr = CheckpointManager(be, async_save=True)
+    tr = Trainer(JOB, (1, 1), ("data", "model"), manager=mgr)
+    tr.init_state()
+    tr.train_steps(1)
+    tr.save(block=True)              # step 1: committed, the target
+    be.fail_host(1)
+    tr.train_steps(1)
+    handle = tr.snapshot()           # step 2: dies on the downed writer
+    if handle is not None:
+        with pytest.raises(IOError):
+            handle.result()          # failed, but drain() still holds it
+
+    def restore(target):
+        assert target.step == 1
+        return Trainer.restore(mgr, step=target.step)
+
+    sup, w = _make([0, 1], mgr, tr, allow_shrink=False, restore=restore)
+    shutil.rmtree(be.root / "host_001")
+    target = _drive_to_death(sup, w, dead_host=1, step=2)
+    assert target.action is FailureAction.RESTART_LAST_CKPT
+    assert int(sup.runner.upper.get("step")) == 1
+    assert any(kind == "casualty_snapshot" for _, kind, _ in sup.events)
+    # and the healed store accepts the next snapshot
+    sup.runner.train_steps(1)
+    sup.runner.save(block=True)
+    assert mgr.backend.latest_step() == 2
+
+
+def test_hot_spare_repairs_colocated_storage(tmp_path):
+    """A death that takes its co-located storage host with it: the
+    takeover must repair the degraded store (peer copies -> full
+    redundancy, writer healed) or the runner's very next snapshot
+    would die on the downed writer — violating 'the runner never
+    stops'."""
+    from repro.core import replication
+    be = ShardedBackend(str(tmp_path), n_hosts=4, replicate=True)
+    mgr = CheckpointManager(be, async_save=False)
+    tr = Trainer(JOB, (1, 1), ("data", "model"), manager=mgr)
+    tr.init_state()
+    tr.train_steps(1)
+    tr.save(block=True)
+
+    sup, w = _make([0, 1, 2, 3], mgr, tr, spares=[7],
+                   restore=lambda t: pytest.fail("hot spare must not "
+                                                 "restore"))
+    shutil.rmtree(be.root / "host_001")
+    be.fail_host(1)
+    target = _drive_to_death(sup, w, dead_host=1, step=1)
+
+    assert target.action is FailureAction.HOT_SPARE
+    assert not replication.scan(be).degraded
+    tr.train_steps(1)
+    tr.save(block=True)          # the downed writer would raise here
+    assert mgr.backend.latest_step() == 2
+
+
+# --- shrink ------------------------------------------------------------------
+
+def test_shrink_policy_token_identical(tmp_path, reference):
+    """No spares, shrink allowed: the dead logical host leaves the
+    world, the runner restores elastically onto the survivors with the
+    logged DataReassign rewritten to the survivor assignment during
+    replay (RestoreTarget.rewrite_op), and the continuation is
+    token-identical — moving shard ownership never changes the data."""
+    ref_digest, _ = reference
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False)
+    tr = Trainer(JOB, (1, 1), ("data", "model"), manager=mgr)
+    tr.init_state()
+    tr.apply_reassignment(rebalance_shards(4, [0, 1, 2]))  # op to rewrite
+    tr.train_steps(2)
+    tr.save(block=True)
+
+    def restore(target):
+        assert target.action is FailureAction.SHRINK
+        assert target.hosts == [0, 1]
+        return Trainer.restore(mgr, step=target.step,
+                               rewrite_op=target.rewrite_op())
+
+    sup, w = _make([0, 1, 2], mgr, tr, restore=restore)
+    target = _drive_to_death(sup, w, dead_host=2, step=2)
+
+    assert target.action is FailureAction.SHRINK
+    assert sup.world == [0, 1]
+    assert sup.hostmap.logical_of(2) is None
+    with pytest.raises(StaleHandleError):
+        sup.hostmap.physical(2)                  # unbound, fails loudly
+    t2 = sup.runner
+    assert t2 is not tr
+    # the REPLAYED log carries the rewritten assignment: only survivors
+    want = tuple(rebalance_shards(4, [0, 1]))
+    assert t2.lower.data_assignment == want
+    assert t2.pipeline.assignment == list(want)
+    assert all(h in (0, 1) for h, _ in t2.pipeline.assignment)
+
+    for _ in range(STEPS - 2):
+        t2.train_steps(1)
+    assert t2.params_digest() == ref_digest
+
+
+# --- straggler feedback ------------------------------------------------------
+
+def test_straggler_triggers_logged_rebalance(tmp_path):
+    """A host whose per-step EWMA exceeds k x median gets its shards
+    moved to the fast hosts — as a logged DataReassign on the live
+    runner, so the mitigation survives a later restart."""
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False)
+    tr = Trainer(JOB, (1, 1), ("data", "model"), manager=mgr)
+    tr.init_state()
+    sup, w = _make([0, 1, 2, 3], mgr, tr, n_shards=8, timeout=1000.0)
+    # hosts 0-2 step once per tick; host 3 once per three ticks (its
+    # per-step EWMA lands at 3x the others')
+    w.down.add(3)          # out of the regular ticker, beaten by hand
+    for step in range(1, 10):
+        w.tick(step)
+        if step % 3 == 0:
+            sup.beat(3, step // 3)
+    slow = sup.check_stragglers()
+    assert slow == [3]
+    reassigns = [op for op in tr.lower.oplog.ops
+                 if isinstance(op, DataReassign)]
+    assert len(reassigns) == 1
+    assert all(h != 3 for h, _ in reassigns[-1].assignment)
+    assert {s for _, s in reassigns[-1].assignment} == set(range(8))
+    assert tr.pipeline.assignment == list(reassigns[-1].assignment)
+    # already-applied assignment is not re-logged on the next check
+    assert sup.check_stragglers() == [3]
+    assert sum(isinstance(op, DataReassign)
+               for op in tr.lower.oplog.ops) == 1
+
+
+# --- serving under the supervisor -------------------------------------------
+
+def test_serving_shrink_reslot_token_identical(tmp_path):
+    """The serving flavor of the loop: a host death shrinks a 2-slot
+    engine onto 1 slot through the elastic re-slot restore path
+    (CacheAlloc/Compile rewritten on replay), and every live request
+    still finishes token-identically to the uninterrupted run."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = get_smoke_config("phi4-mini-3.8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(0, cfg.vocab_size, size=4) for _ in range(4)]
+
+    def fresh_requests():
+        return [Request(rid=i, prompt=p.copy(), max_new=5)
+                for i, p in enumerate(prompts)]
+
+    # uninterrupted reference
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    ref_eng = ServingEngine(cfg, params, mesh, n_slots=2, max_seq=32)
+    ref = fresh_requests()
+    for r in ref:
+        ref_eng.submit(r)
+    ref_eng.run_until_drained(max_steps=200)
+    want = {r.rid: list(r.out) for r in ref}
+
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False)
+    eng = ServingEngine.create("phi4-mini-3.8b-smoke", params, (1, 1),
+                               n_slots=2, max_seq=32, manager=mgr)
+    reqs = fresh_requests()
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    eng.snapshot(block=True)
+    assert any(eng.slot_req), "must snapshot mid-flight"
+
+    def restore(target):
+        return ServingEngine.restore(mgr, params,
+                                     n_slots=len(target.hosts),
+                                     step=target.step)
+
+    sup, w = _make([0, 1], mgr, eng, restore=restore, n_shards=None)
+    target = _drive_to_death(sup, w, dead_host=1, step=4)
+    assert target.action is FailureAction.SHRINK
+
+    eng2 = sup.runner
+    assert eng2.n_slots == 1
+    finished = {r.rid: list(r.out) for r in reqs if r.done}
+    live = eng2.live_requests()
+    assert {r.rid for r in live} | set(finished) == set(want)
+    eng2.run_until_drained(max_steps=200)
+    for r in live:
+        assert r.done and r.out == want[r.rid], (r.rid, r.out, want[r.rid])
+    for rid, out in finished.items():
+        assert out == want[rid]
+
+
+# --- multi-device shrink (slow: fresh jax subprocess) ------------------------
+
+@pytest.mark.slow
+def test_shrink_onto_smaller_mesh_multidevice(subproc):
+    """The full elastic story under the supervisor: four hosts each
+    backing one device column of a (2,2) mesh; a host death shrinks the
+    job onto a (2,1) mesh over the survivors' devices via the
+    supervisor's restore hook (mesh_factory + rewrite_op), restore is
+    digest-exact and the continuation loss matches the big-mesh run."""
+    out = subproc("""
+    import tempfile, numpy as np, jax
+    from repro.core import (CheckpointManager, ClusterSupervisor,
+                            FailureAction, LocalFSBackend)
+    from repro.train.loop import Trainer, TrainJob
+    job = TrainJob(arch="phi4-mini-3.8b-smoke", shape_key="train_s16_b4")
+    root = tempfile.mkdtemp()
+    mgr = CheckpointManager(LocalFSBackend(root), async_save=False)
+    tr = Trainer(job, (2, 2), ("data", "model"), manager=mgr)
+    tr.init_state()
+    tr.train_steps(2)
+    tr.save(block=True)
+    d0 = tr.params_digest()
+    ref_loss = Trainer.restore(mgr).train_steps(1)["loss"]
+
+    t = [0.0]
+    def restore(target):
+        return Trainer.restore(
+            mgr, step=target.step,
+            mesh_factory=lambda: jax.make_mesh((2, 1), ("data", "model")),
+            rewrite_op=target.rewrite_op())
+    sup = ClusterSupervisor([0, 1, 2, 3], manager=mgr,
+                            heartbeat_timeout=3.0, clock=lambda: t[0],
+                            n_shards=4, restore=restore, runner=tr)
+    for step in range(8):
+        t[0] += 1.0
+        for h in (0, 1, 2):
+            sup.beat(h, step)
+    target = sup.poll()
+    assert target.action is FailureAction.SHRINK, target
+    t2 = sup.runner
+    assert dict(t2.lower.mesh.shape) == {"data": 2, "model": 1}
+    assert t2.params_digest() == d0, "restore must be exact"
+    assert all(h in (0, 1, 2) for h, _ in t2.lower.data_assignment)
+    loss = t2.train_steps(1)["loss"]
+    np.testing.assert_allclose(loss, ref_loss, rtol=2e-2, atol=2e-3)
+    print("SHRINK-MESH OK", loss)
+    """, n_devices=4)
+    assert "SHRINK-MESH OK" in out
