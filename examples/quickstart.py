@@ -1,12 +1,12 @@
-"""Quickstart: train a small model under the C/R runtime, checkpoint,
-and print losses.
+"""Quickstart: train a small model under the C/R runtime through the
+public session API, checkpoint on a policy cadence, and print losses.
 
     PYTHONPATH=src python examples/quickstart.py --arch qwen2.5-32b-smoke
 """
 import argparse
 import tempfile
 
-from repro.core import CheckpointManager, LocalFSBackend
+from repro.api import CheckpointSession, Policy
 from repro.train.loop import Trainer, TrainJob
 
 
@@ -16,30 +16,33 @@ def main() -> None:
                     help="registry id or '<id>-smoke'")
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--ckpt-every", type=int, default=5)
-    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--store", default=None,
+                    help="store spec, e.g. localfs:/tmp/job or "
+                         "sharded:/tmp/job?hosts=4 (default: a localfs "
+                         "tempdir) — swapping checkpoint packages is "
+                         "this one string")
     args = ap.parse_args()
 
-    root = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ckpt_")
-    # delta_base_interval=4: full base snapshot every 4th checkpoint,
-    # XOR delta links between — restore walks the chain automatically
-    mgr = CheckpointManager(LocalFSBackend(root), async_save=True,
-                            keep_last=3, delta_base_interval=4)
+    store = args.store or f"localfs:{tempfile.mkdtemp(prefix='repro_ckpt_')}"
+    # chain=4: full base snapshot every 4th checkpoint, XOR delta links
+    # between — restore walks the chain automatically
+    sess = CheckpointSession(store, Policy(interval=args.ckpt_every,
+                                           keep_last=3, chain=4))
     job = TrainJob(arch=args.arch, shape_key="train_s32_b4")
-    tr = Trainer(job, (1, 1), ("data", "model"), manager=mgr)
+    tr = sess.attach(Trainer(job, (1, 1), ("data", "model"),
+                             manager=sess.manager))
     tr.init_state()
-    print(f"arch={args.arch} params checkpointing to {root}")
+    print(f"arch={args.arch} params checkpointing to {store}")
 
-    for step in range(args.steps):
+    for _ in range(args.steps):
         m = tr.train_steps(1)
         print(f"step {m['step']:4.0f} loss {m['loss']:.4f} "
               f"lr {m['lr']:.2e} |g| {m['grad_norm']:.3f}")
-        if (step + 1) % args.ckpt_every == 0:
-            tr.snapshot()  # non-blocking: encode+write overlap next steps
-            print(f"  checkpoint @ step {int(tr.upper.get('step'))} "
-                  f"(async)")
-    mgr.wait()
-    s = mgr.stats
-    print(f"done; checkpoints at steps {mgr.backend.list_steps()} "
+        if sess.maybe_snapshot() is not None:
+            print(f"  checkpoint @ step {tr.checkpoint_step()} (async)")
+    sess.wait()
+    s = sess.stats
+    print(f"done; checkpoints at steps {sess.backend.list_steps()} "
           f"({s['bytes_written'] / 2**20:.1f} MiB written for "
           f"{s['bytes_logical'] / 2**20:.1f} MiB logical)")
 

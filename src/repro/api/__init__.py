@@ -1,0 +1,87 @@
+"""repro.api — the public, checkpoint-agnostic session surface.
+
+Applications import ONLY from here: the ``CheckpointableApp`` protocol
+to implement, the ``CheckpointSession`` facade that owns the snapshot /
+restore / supervise lifecycle, the frozen ``Policy`` value, the
+URI-spec registries (``register_backend`` / ``register_app_kind`` /
+``register_codec``), the typed error hierarchy, and the state-declaration
+types (``UpperHalf``, ``OpLog``) re-exported so app code never reaches
+into ``repro.core``. See ARCHITECTURE.md "Public API".
+
+Exports resolve lazily (PEP 562): ``repro.core`` modules import
+``repro.api.errors`` at their own load time, so this package must stay
+import-cycle-neutral — nothing heavy runs until an attribute is asked
+for.
+"""
+from __future__ import annotations
+
+__all__ = [
+    # facade + protocol
+    "CheckpointSession",
+    "CheckpointableApp",
+    "RestoreContext",
+    "Policy",
+    "validate_app",
+    # registries
+    "register_app_kind",
+    "register_backend",
+    "register_codec",
+    "resolve_app_kind",
+    "resolve_backend",
+    "parse_store_spec",
+    "available_codecs",
+    # state declaration (re-exports: apps never import repro.core)
+    "UpperHalf",
+    "OpLog",
+    # typed errors
+    "CheckpointError",
+    "PolicyError",
+    "BackendUnavailable",
+    "SnapshotError",
+    "RestoreError",
+    "StaleHandleError",
+    "LifecycleError",
+    "SupervisorError",
+    "errors",
+]
+
+_HOMES = {
+    "CheckpointSession": "repro.api.session",
+    "CheckpointableApp": "repro.api.app",
+    "RestoreContext": "repro.api.app",
+    "validate_app": "repro.api.app",
+    "Policy": "repro.api.policy",
+    "register_app_kind": "repro.api.registry",
+    "register_backend": "repro.api.registry",
+    "register_codec": "repro.api.registry",
+    "resolve_app_kind": "repro.api.registry",
+    "resolve_backend": "repro.api.registry",
+    "parse_store_spec": "repro.api.registry",
+    "available_codecs": "repro.api.registry",
+    "UpperHalf": "repro.core.split_state",
+    "OpLog": "repro.core.oplog",
+    "CheckpointError": "repro.api.errors",
+    "PolicyError": "repro.api.errors",
+    "BackendUnavailable": "repro.api.errors",
+    "SnapshotError": "repro.api.errors",
+    "RestoreError": "repro.api.errors",
+    "StaleHandleError": "repro.api.errors",
+    "LifecycleError": "repro.api.errors",
+    "SupervisorError": "repro.api.errors",
+}
+
+
+def __getattr__(name: str):
+    if name == "errors":
+        import repro.api.errors as errors
+        return errors
+    home = _HOMES.get(name)
+    if home is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(home), name)
+
+
+def __dir__():
+    return sorted(__all__)

@@ -64,6 +64,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.api.errors import PolicyError, RestoreError, SnapshotError
 from repro.core.backends.base import CheckpointBackend
 from repro.core import delta as deltamod
 from repro.core.oplog import OpLog
@@ -436,7 +437,7 @@ class AsyncSnapshotter:
             # construction, not deep inside the first chained save
             if cb <= 0 or cb % 1024 or (cb > FP_SEG_BYTES
                                         and cb % FP_SEG_BYTES):
-                raise ValueError(
+                raise PolicyError(
                     f"sparse_chunk_bytes={cb} must be a positive multiple "
                     f"of 1024, and of {FP_SEG_BYTES} once above it")
             # dirty detection pays off where the fingerprint pass avoids
@@ -599,7 +600,7 @@ class AsyncSnapshotter:
             # capture predicted a chain link that encode can't honor
             # (the previous snapshot failed after this capture ran);
             # the sparse payload alone can't produce a full base
-            raise RuntimeError(
+            raise SnapshotError(
                 "sparse capture lost its chain base (a preceding "
                 "snapshot failed); this snapshot cannot be encoded")
 
@@ -612,13 +613,13 @@ class AsyncSnapshotter:
             for path, arr in leaves.items():
                 if isinstance(arr, _SparseLeaf):
                     if arr.base_step != base_step:
-                        raise RuntimeError(
+                        raise SnapshotError(
                             f"sparse capture of {name}:{path} is relative "
                             f"to step {arr.base_step}, but the encode "
                             f"chain base is {base_step}")
                     prev_arr = base_state.get(name, {}).get(path)
                     if prev_arr is None:
-                        raise RuntimeError(
+                        raise SnapshotError(
                             f"sparse capture of {name}:{path} has no "
                             "previous value in the pinned mirror")
                     m = deltamod.encode_leaf_sparse(
@@ -837,7 +838,7 @@ KNOWN_MANIFEST_FORMATS = (1, 2, 3)
 def check_manifest_format(manifest: Dict[str, Any]) -> None:
     fmt = manifest.get("format", 1)
     if fmt not in KNOWN_MANIFEST_FORMATS:
-        raise ValueError(
+        raise RestoreError(
             f"checkpoint manifest format {fmt} is newer than this build "
             f"understands (known: {KNOWN_MANIFEST_FORMATS})")
 

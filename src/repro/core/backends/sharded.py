@@ -20,6 +20,7 @@ from concurrent.futures import ThreadPoolExecutor, wait
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
+from repro.api.errors import BackendUnavailable
 from repro.core.backends.base import (CheckpointBackend, clean_tmp_under,
                                       write_atomic)
 
@@ -131,7 +132,7 @@ class ShardedBackend(CheckpointBackend):
                 pass
         missing = verify_restorable(self, manifest, exclude=exclude)
         if missing:
-            raise RuntimeError(
+            raise BackendUnavailable(
                 f"refusing to commit step {step}: {len(missing)} "
                 f"referenced blob(s) unservable (first: {missing[0]})")
         write_atomic(self._manifest_path(step),

@@ -21,6 +21,11 @@ Formats 1-3 all restore through the same path (matrix in README).
 
 Synchronous behavior (``async_save=False`` or ``save(block=True)``) runs
 the same pipeline and joins it before returning.
+
+This manager is mechanism; applications should construct it through the
+public surface — ``repro.api.Policy.build_manager`` (validated
+configuration) inside a ``repro.api.CheckpointSession`` (the lifecycle
+facade) — rather than spelling the kwargs here.
 """
 from __future__ import annotations
 

@@ -51,6 +51,8 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.api.errors import RestoreError, SnapshotError
+
 try:  # bfloat16 numpy interop (ships with jax)
     import ml_dtypes
     _BF16 = np.dtype(ml_dtypes.bfloat16)
@@ -75,7 +77,7 @@ def _hash(data: bytes) -> str:
 def _np_dtype(name: str) -> np.dtype:
     if name == "bfloat16":
         if _BF16 is None:
-            raise RuntimeError("ml_dtypes unavailable for bfloat16")
+            raise SnapshotError("ml_dtypes unavailable for bfloat16")
         return _BF16
     return np.dtype(name)
 
@@ -220,7 +222,7 @@ def _decode_part(pmeta: Dict[str, Any], get_blob,
                  prev: Optional[np.ndarray] = None) -> np.ndarray:
     if "dirty" in pmeta:  # format-3 sparse dirty-chunk part
         if prev is None:
-            raise ValueError("sparse xor part needs its base-step value")
+            raise RestoreError("sparse xor part needs its base-step value")
         return _decode_part_sparse(pmeta, get_blob, prev)
     dt = _np_dtype(pmeta["dtype"])
     shape = pmeta["shape"]
@@ -390,7 +392,7 @@ def decode_leaf(meta: Dict[str, Any],
         mode = "codec" if meta.get("codec") else "full"
     if mode == "xor":
         if prev is None:
-            raise ValueError("xor leaf needs its base-step value")
+            raise RestoreError("xor leaf needs its base-step value")
         return _decode_part(meta["parts"]["raw"], get_blob,
                             prev=prev).reshape(shape)
     parts = {pname: _decode_part(pmeta, get_blob)

@@ -33,13 +33,14 @@ from __future__ import annotations
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.api.errors import CheckpointError
 from repro.core.checkpoint import CheckpointManager, RestoredState
 from repro.core.oplog import CacheAlloc, Compile, Op, OpLog
 from repro.core.split_state import LowerHalf
 from repro.core.virtual_ids import VirtualId
 
 
-class LifecycleError(RuntimeError):
+class LifecycleError(CheckpointError, RuntimeError):
     """An Incarnation phase was invoked out of order (or twice)."""
 
 

@@ -24,6 +24,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.api.errors import RestoreError
 from repro.core.oplog import (
     OpLog, Op, MeshCreate, Compile, CacheAlloc, CacheFree, DataAdvance,
     DataReassign, ScheduleSet,
@@ -68,8 +69,8 @@ def tree_from_paths(by_path: Dict[str, Any]) -> Any:
                          .replace("\\\\", "\\"))
             pos = m.end()
         if pos != len(path) or not keys:
-            raise ValueError(f"non-dict path {path!r}; use fill_like with "
-                             "a structural template instead")
+            raise RestoreError(f"non-dict path {path!r}; use fill_like with "
+                               "a structural template instead")
         node = out
         for k in keys[:-1]:
             node = node.setdefault(k, {})
@@ -143,9 +144,12 @@ class UpperHalf:
         for name, e in self._entries.items():
             leaves = {}
             for p, v in flatten_with_paths(e.tree):
-                arr = np.asarray(jax.device_get(v)) if not hasattr(v, "shape") else v
-                leaves[p] = {"shape": list(getattr(arr, "shape", ())),
-                             "dtype": str(getattr(arr, "dtype", type(arr).__name__))}
+                # shape/dtype description needs no device transfer:
+                # array-likes carry both already; scalar/non-array
+                # leaves (int, float, list) are viewed through numpy
+                arr = v if hasattr(v, "shape") else np.asarray(v)
+                leaves[p] = {"shape": list(arr.shape),
+                             "dtype": str(arr.dtype)}
             logical = None
             if e.logical is not None:
                 logical = {p: list(ax) for p, ax in flatten_with_paths(e.logical)}

@@ -34,11 +34,13 @@ down, repair a degraded ``ShardedBackend`` from peer replicas
 ``RestoreTarget`` it receives carries the step, the surviving topology
 and a ready-made ``rewrite_op`` for re-shard/re-slot replay).
 
-The runner-*specific* rebuild (``Trainer.restore`` vs
-``ServingEngine.restore``) stays with the caller as the ``restore``
-hook; everything policy-shaped — detection, decision, storage repair,
-host-map surgery, reassignment logging, MTTR accounting — lives here,
-once, for both. ``launch/train.py --supervise`` and ``launch/serve.py
+The runner-*specific* rebuild stays with the caller as the ``restore``
+hook — the supported wiring is ``repro.api.CheckpointSession.
+supervise``, whose hook resolves the checkpoint's app kind through the
+registry and rebuilds whatever workload the manifest names; everything
+policy-shaped — detection, decision, storage repair, host-map surgery,
+reassignment logging, MTTR accounting — lives here, once, for every
+kind. ``launch/train.py --supervise`` and ``launch/serve.py
 --supervise`` route production entry points through it;
 ``benchmarks/mttr.py`` measures detection→serving-again per policy.
 """
@@ -49,6 +51,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.api.errors import CheckpointError
 from repro.core.failure import (FailureAction, FailurePolicy,
                                 HeartbeatMonitor, HostState,
                                 StragglerDetector, rebalance_shards)
@@ -98,7 +101,7 @@ class Incident:
     wall_s: float
 
 
-class SupervisorError(RuntimeError):
+class SupervisorError(CheckpointError, RuntimeError):
     """The supervisor could not execute a decision (no restore hook, no
     restorable checkpoint, unrecoverable storage)."""
 
@@ -112,8 +115,9 @@ class ClusterSupervisor:
                  step and (ShardedBackend) storage repair.
     ``spares``   idle physical ranks the HOT_SPARE policy may consume.
     ``restore``  Callable[[RestoreTarget], runner] — rebuilds the runner
-                 through the Incarnation lifecycle (Trainer.restore /
-                 ServingEngine.restore). Required for RESTART/SHRINK.
+                 through the Incarnation lifecycle; the supported hook
+                 is the one ``CheckpointSession.supervise`` wires (the
+                 app-kind registry). Required for RESTART/SHRINK.
     ``teardown`` Callable[[runner], None] — optional explicit kill of
                  the current runner before a restore (default: drop the
                  reference; a real launcher would kill pods here).
@@ -356,8 +360,20 @@ class ClusterSupervisor:
             st.alive = True
 
     def _teardown_runner(self) -> None:
-        if self.runner is not None and self._teardown is not None:
-            self._teardown(self.runner)
+        """Kill the current runner — after giving it the protocol's
+        optional ``quiesce()`` hook (CheckpointableApp): an app that
+        buffers work gets one chance to flush before its replacement is
+        rebuilt. A quiesce failure is part of the incident being
+        handled, not a new crash."""
+        if self.runner is not None:
+            q = getattr(self.runner, "quiesce", None)
+            if callable(q):
+                try:
+                    q()
+                except Exception as e:  # noqa: BLE001 — incident-scoped
+                    self._event("quiesce_failed", error=repr(e))
+            if self._teardown is not None:
+                self._teardown(self.runner)
         self.runner = None
 
     def _repair(self) -> None:

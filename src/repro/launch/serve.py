@@ -1,18 +1,20 @@
 """Serving launcher: continuous-batching engine over a registry arch
 (smoke configs for CPU; full configs on real hardware), under the C/R
-runtime when a checkpoint directory is given.
+runtime when a checkpoint store is given.
 
   PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b-smoke \
-      --requests 6 --max-new 8 [--ckpt-dir /tmp/svc --snapshot-every 4]
+      --requests 6 --max-new 8 [--store localfs:/tmp/svc --snapshot-every 4]
 
-With ``--ckpt-dir`` the engine is built through the logged lower half
-and snapshots its live sessions (queue, in-flight requests, KV cache)
-every ``--snapshot-every`` steps. ``--resume [latest|STEP]`` restores a
+With ``--store`` (or legacy ``--ckpt-dir``) the engine is built through
+the logged lower half and snapshots its live sessions (queue, in-flight
+requests, KV cache) every ``--snapshot-every`` steps; swapping the
+checkpoint package is a one-string change (``--store
+sharded:/tmp/svc?hosts=4``). ``--resume [latest|STEP]`` restores a
 killed server and finishes the interrupted requests; pass a different
 ``--slots`` to re-slot the sessions onto a larger or smaller engine
 (elastic serving restore).
 
-``--supervise`` (requires ``--ckpt-dir``) routes serving under a
+``--supervise`` (requires a store) routes serving under a
 ``ClusterSupervisor`` over a simulated ``--hosts``-host world: a host
 death (inject one with ``--kill-host H@STEP``) is detected after
 ``--heartbeat-timeout`` silent ticks and the decision executes for
@@ -31,8 +33,9 @@ import jax
 import numpy as np
 
 from repro.configs import registry as cfg_registry
-from repro.core import (CheckpointManager, ClusterSupervisor,
-                        make_backend)
+from repro.launch.common import (add_store_args, build_session,
+                                 parse_resume_arg, resolve_store,
+                                 validate_resume)
 from repro.launch.supervise import (SimWorldDriver, add_supervise_args,
                                     parse_supervise_args)
 from repro.models import model as M
@@ -48,19 +51,8 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=5)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt-dir", default=None,
-                    help="enable live-session checkpointing to this dir")
-    ap.add_argument("--backend", choices=("localfs", "sharded"),
-                    default="localfs")
-    ap.add_argument("--snapshot-every", type=int, default=4,
-                    help="snapshot cadence in engine steps (with "
-                         "--ckpt-dir)")
-    ap.add_argument("--resume", nargs="?", const="latest", default=None,
-                    metavar="STEP",
-                    help="restore live sessions from --ckpt-dir: "
-                         "'latest' (the bare flag) or a step number; "
-                         "--slots may differ from the checkpoint "
-                         "(elastic re-slotting)")
+    add_store_args(ap, interval_flag="--snapshot-every",
+                   interval_default=4, interval_unit="engine steps")
     add_supervise_args(ap, unit="engine step")
     args = ap.parse_args(argv)
 
@@ -68,40 +60,41 @@ def main(argv=None) -> int:
     if err is not None:
         print(err, file=sys.stderr)
         return 2
-    if args.supervise and not args.ckpt_dir:
-        print("[serve] --supervise needs --ckpt-dir (restarts resume "
-              "from snapshots)", file=sys.stderr)
+    spec, err = resolve_store(args, "serve")
+    if err is not None:
+        print(err, file=sys.stderr)
+        return 2
+    if args.supervise and not spec:
+        print("[serve] --supervise needs --store/--ckpt-dir (restarts "
+              "resume from snapshots)", file=sys.stderr)
         return 2
 
     # validate the cheap stuff before paying jax init + param build
-    resume_step = None
-    if args.resume is not None and args.resume != "latest":
-        try:
-            resume_step = int(args.resume)
-        except ValueError:
-            print(f"[serve] --resume: expected 'latest' or a step "
-                  f"number, got {args.resume!r}", file=sys.stderr)
-            return 2
-    if args.resume is not None and not args.ckpt_dir:
-        print("[serve] --resume needs --ckpt-dir", file=sys.stderr)
+    resume, resume_step, err = parse_resume_arg(args, "serve")
+    if err is not None:
+        print(err, file=sys.stderr)
+        return 2
+    if resume and not spec:
+        print("[serve] --resume needs --store/--ckpt-dir",
+              file=sys.stderr)
         return 2
 
-    mgr = None
-    if args.ckpt_dir:
-        mgr = CheckpointManager(make_backend(args.backend, args.ckpt_dir),
-                                async_save=True)
-    step = resume_step
-    if args.resume is not None:
-        from repro.core.restore import restorable_steps
-        ok = restorable_steps(mgr.backend)
-        if not ok or (step is not None and step not in ok):
-            print(f"[serve] --resume: step "
-                  f"{'latest' if step is None else step} not restorable "
-                  f"in {args.ckpt_dir} (have {ok})", file=sys.stderr)
+    sess = None
+    if spec:
+        sess, err = build_session(spec, "serve",
+                                  interval=args.snapshot_every,
+                                  keep_last=args.keep_last)
+        if err is not None:
+            print(err, file=sys.stderr)
             return 2
-        if step is None:
-            step = ok[-1]  # newest step with an intact chain
-        ckpt_arch = mgr.backend.get_manifest(step).get("job", {}).get("arch")
+    step = resume_step
+    if resume:
+        step, err = validate_resume(sess, step, spec, "serve")
+        if err is not None:
+            print(err, file=sys.stderr)
+            return 2
+        ckpt_arch = sess.backend.get_manifest(step).get("job",
+                                                        {}).get("arch")
         if ckpt_arch is not None and ckpt_arch != args.arch:
             print(f"[serve] --resume: checkpoint was taken with arch "
                   f"{ckpt_arch!r}, not {args.arch!r} — the params built "
@@ -117,9 +110,9 @@ def main(argv=None) -> int:
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     n_dev = len(jax.devices())
 
-    if args.resume is not None:
-        eng = ServingEngine.restore(mgr, params, n_slots=args.slots,
-                                    step=step)
+    if resume:
+        eng = sess.restore(step=step, expect_kind="serving",
+                           params=params, n_slots=args.slots)
         reqs = eng.live_requests()
         inc = eng.incarnation
         print(f"[serve] RESUMED at engine step {eng.steps} with "
@@ -127,9 +120,12 @@ def main(argv=None) -> int:
               f"(materialize {inc.timings['materialize_s']:.2f}s, "
               f"replay {inc.timings['replay_s']:.2f}s)")
     else:
-        eng = ServingEngine.create(args.arch, params, (n_dev, 1),
-                                   n_slots=args.slots,
-                                   max_seq=args.max_seq, manager=mgr)
+        eng = ServingEngine.create(
+            args.arch, params, (n_dev, 1), n_slots=args.slots,
+            max_seq=args.max_seq,
+            manager=sess.manager if sess is not None else None)
+        if sess is not None:
+            sess.attach(eng)
         rng = np.random.RandomState(args.seed)
         reqs = [Request(rid=i,
                         prompt=rng.randint(0, cfg.vocab_size,
@@ -144,11 +140,12 @@ def main(argv=None) -> int:
     already = sum(len(r.out) for r in reqs)
     t0 = time.monotonic()
     if args.supervise:
-        eng, reg = _run_supervised(args, mgr, eng, params, kill)
+        eng, reg = _run_supervised(args, sess, eng, params, kill)
         reqs = sorted(reg.values(), key=lambda r: r.rid)
     else:
         eng.run_until_drained(
-            snapshot_every=args.snapshot_every if mgr is not None else None)
+            snapshot_every=sess.policy.interval if sess is not None
+            else None)
     dt = time.monotonic() - t0
     toks = sum(len(r.out) for r in reqs) - already
     print(f"[serve] {len(reqs)} requests, {toks} tokens in {dt:.2f}s "
@@ -159,35 +156,36 @@ def main(argv=None) -> int:
     return 0
 
 
-def _run_supervised(args, mgr, eng, params, kill, max_steps: int = 10_000):
+def _run_supervised(args, sess, eng, params, kill, max_steps: int = 10_000):
     """Drain the engine under the failure loop: one virtual-clock tick
-    per engine step; a detected death swaps the engine under us (shrink
-    restores the live sessions onto proportionally fewer slots through
-    the elastic re-slot path). Returns the final engine and the latest
-    Request object seen per rid — finished or restored, the newest
-    object holds the request's authoritative output."""
+    per engine step; a detected death swaps the engine under us through
+    the session's app-kind registry (shrink restores the live sessions
+    onto proportionally fewer slots through the elastic re-slot path).
+    Returns the final engine and the latest Request object seen per
+    rid — finished or restored, the newest object holds the request's
+    authoritative output."""
     world = list(range(args.hosts))
     spares = list(range(args.hosts, args.hosts + args.spares))
     driver = SimWorldDriver(kill)
 
-    def restore(target):
+    def restore_kwargs(target):
         # ceiling division: losing 1 of 4 hosts must not halve a
         # 2-slot engine — capacity shrinks proportionally, rounded up
         n_slots = max(1, -(-args.slots * len(target.hosts) // args.hosts))
-        e = ServingEngine.restore(mgr, params, n_slots=n_slots,
-                                  step=target.step)
+        return {"params": params, "n_slots": n_slots}
+
+    def on_restored(e, target):
         print(f"[supervisor] restored {len(e.live_requests())} live "
               f"sessions on {e.n_slots} slots at engine step {e.steps}")
-        return e
 
-    sup = ClusterSupervisor(
-        world, manager=mgr, spares=spares,
+    sup = sess.supervise(
+        world, spares=spares,
         heartbeat_timeout=args.heartbeat_timeout,
         clock=driver.clock, allow_shrink=not args.no_shrink,
-        restore=restore, runner=eng)
+        restore_kwargs=restore_kwargs, on_restored=on_restored)
     driver.attach(sup)
-    if mgr.backend.latest_step() is None:
-        eng.snapshot(block=True)   # baseline: a death before the first
+    if sess.latest_step() is None:
+        sess.snapshot(block=True)   # baseline: a death before the first
         # --snapshot-every commit still has a restore target (a resumed
         # engine already has one — don't overwrite its manifest)
     reg = {}
@@ -199,11 +197,10 @@ def _run_supervised(args, mgr, eng, params, kill, max_steps: int = 10_000):
             break
         eng.step()
         max_steps -= 1
-        if args.snapshot_every and eng.steps % args.snapshot_every == 0:
-            eng.snapshot()
+        sess.maybe_snapshot()   # Policy.interval is the one cadence
         driver.tick(eng.steps)
     driver.warn_if_kill_pending()
-    mgr.wait()
+    sess.wait()
     return sup.runner, reg
 
 

@@ -4,7 +4,11 @@ production crash-loop contract: the same command line either cold-starts
 or transparently resumes).
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b-smoke \
-      --shape train_s32_b4 --steps 20 --ckpt-dir /tmp/job1 [--backend sharded]
+      --shape train_s32_b4 --steps 20 --store localfs:/tmp/job1
+
+Swapping checkpoint packages is a one-string change (the paper's §V
+claim at the command line): ``--store sharded:/tmp/job1?hosts=4``.
+``--ckpt-dir`` (+ ``--backend``) remain as legacy aliases.
 
 Re-running the identical command after a kill continues bitwise from the
 last committed checkpoint. ``--resume [latest|STEP]`` makes the intent
@@ -17,11 +21,12 @@ under a ``ClusterSupervisor`` over a simulated ``--hosts``-host world
 hosts and ``--heartbeat-timeout`` ticks of silence meaning death.
 ``--kill-host H@STEP`` injects a host death mid-run; the supervisor
 detects it, decides (hot-spare > shrink > restart-last-ckpt), and
-executes the decision end-to-end — storage repair, Incarnation restore,
-logged shard rebalance — then training continues:
+executes the decision end-to-end — storage repair, restore through the
+session's app-kind registry, logged shard rebalance — then training
+continues:
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b-smoke \
-      --steps 20 --ckpt-dir /tmp/job1 --backend sharded \
+      --steps 20 --store sharded:/tmp/job1 \
       --supervise --hosts 4 --spares 1 --kill-host 2@8
 """
 from __future__ import annotations
@@ -31,8 +36,10 @@ import sys
 
 import jax
 
-from repro.core import (CheckpointManager, ClusterSupervisor,
-                        FailureAction, make_backend)
+from repro.core import FailureAction
+from repro.launch.common import (add_store_args, build_session,
+                                 parse_resume_arg, resolve_store,
+                                 validate_resume)
 from repro.launch.supervise import (SimWorldDriver, add_supervise_args,
                                     parse_supervise_args)
 from repro.train.loop import Trainer, TrainJob
@@ -45,19 +52,11 @@ def main(argv=None) -> int:
     ap.add_argument("--shape", default="train_s32_b4",
                     help="shape cell or '<kind>_s<seq>_b<batch>'")
     ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--ckpt-every", type=int, default=5)
-    ap.add_argument("--ckpt-dir", required=True)
-    ap.add_argument("--backend", choices=("localfs", "sharded"),
-                    default="localfs")
-    ap.add_argument("--keep-last", type=int, default=3)
     ap.add_argument("--data-mesh", type=int, default=0,
                     help="data axis size (0 = all local devices)")
     ap.add_argument("--model-mesh", type=int, default=1)
-    ap.add_argument("--resume", nargs="?", const="latest", default=None,
-                    metavar="STEP",
-                    help="resume from a checkpoint: 'latest' (the bare "
-                         "flag) or a step number; fails instead of "
-                         "cold-starting when none is restorable")
+    add_store_args(ap, interval_flag="--ckpt-every", interval_default=5,
+                   keep_last_default=3)
     add_supervise_args(ap)
     args = ap.parse_args(argv)
 
@@ -65,106 +64,100 @@ def main(argv=None) -> int:
     if err is not None:
         print(err, file=sys.stderr)
         return 2
+    spec, err = resolve_store(args, "launch")
+    if err is not None:
+        print(err, file=sys.stderr)
+        return 2
+    if spec is None:
+        print("[launch] a checkpoint store is required: --store "
+              "scheme:/path (or legacy --ckpt-dir DIR)", file=sys.stderr)
+        return 2
+    resume, resume_step, err = parse_resume_arg(args, "launch")
+    if err is not None:
+        print(err, file=sys.stderr)
+        return 2
 
     n_dev = len(jax.devices())
     d = args.data_mesh or (n_dev // args.model_mesh)
-    mgr = CheckpointManager(make_backend(args.backend, args.ckpt_dir),
-                            async_save=True, keep_last=args.keep_last)
+    sess, err = build_session(spec, "launch", interval=args.ckpt_every,
+                              keep_last=args.keep_last)
+    if err is not None:
+        print(err, file=sys.stderr)
+        return 2
 
-    resume_step = None
-    if args.resume is not None and args.resume != "latest":
-        try:
-            resume_step = int(args.resume)
-        except ValueError:
-            print(f"[launch] --resume: expected 'latest' or a step "
-                  f"number, got {args.resume!r}", file=sys.stderr)
+    if resume:
+        resume_step, err = validate_resume(sess, resume_step, spec,
+                                           "launch")
+        if err is not None:
+            print(err, file=sys.stderr)
             return 2
-    if args.resume is not None:
-        from repro.core.restore import restorable_steps
-        ok = restorable_steps(mgr.backend)
-        if not ok:
-            print(f"[launch] --resume: no restorable checkpoint in "
-                  f"{args.ckpt_dir}", file=sys.stderr)
-            return 2
-        if resume_step is not None and resume_step not in ok:
-            print(f"[launch] --resume: step {resume_step} not restorable "
-                  f"(have {ok})", file=sys.stderr)
-            return 2
-        if resume_step is None:
-            resume_step = ok[-1]  # newest step with an intact chain
 
-    if mgr.backend.latest_step() is not None:
-        tr = Trainer.restore(mgr, step=resume_step)
+    if sess.latest_step() is not None:
+        tr = sess.restore(step=resume_step, expect_kind="train")
         inc = tr.incarnation
         print(f"[launch] RESUMED {args.arch} at step "
-              f"{int(tr.upper.get('step'))} from {args.ckpt_dir} "
+              f"{tr.checkpoint_step()} from {spec} "
               f"(materialize {inc.timings['materialize_s']:.2f}s, "
               f"replay {inc.timings['replay_s']:.2f}s, "
               f"rebind {inc.timings.get('rebind_s', 0.0):.2f}s)")
     else:
         job = TrainJob(arch=args.arch, shape_key=args.shape)
-        tr = Trainer(job, (d, args.model_mesh), ("data", "model"),
-                     manager=mgr)
+        tr = sess.attach(Trainer(job, (d, args.model_mesh),
+                                 ("data", "model"), manager=sess.manager))
         tr.init_state()
         print(f"[launch] COLD START {args.arch} on mesh "
               f"({d},{args.model_mesh})")
 
     if args.supervise:
-        tr = _run_supervised(args, mgr, tr, kill)
+        tr = _run_supervised(args, sess, tr, kill)
     else:
-        start = int(tr.upper.get("step"))
-        for step in range(start, args.steps):
+        for step in range(tr.checkpoint_step(), args.steps):
             m = tr.train_steps(1)
             print(f"step {m['step']:5.0f} loss {m['loss']:.4f} "
                   f"lr {m['lr']:.2e}", flush=True)
-            if (step + 1) % args.ckpt_every == 0 or step + 1 == args.steps:
-                tr.save(block=False)
-    mgr.wait()
-    print(f"[launch] done at step {int(tr.upper.get('step'))}; "
-          f"checkpoints: {mgr.backend.list_steps()}")
+            sess.maybe_snapshot(final=step + 1 == args.steps)
+    sess.wait()
+    print(f"[launch] done at step {tr.checkpoint_step()}; "
+          f"checkpoints: {sess.backend.list_steps()}")
     return 0
 
 
-def _run_supervised(args, mgr, tr, kill):
+def _run_supervised(args, sess, tr, kill):
     """The failure loop around the step loop: every step is one tick of
     the simulated world's clock; live hosts heartbeat, the supervisor
-    polls, and an executed decision swaps the runner under us (the
-    restored trainer resumes from the last committed step — the
-    crash-loop contract, but automated)."""
+    polls, and an executed decision swaps the runner under us — the
+    restore goes back through the session's app-kind registry, so the
+    supervisor never touches trainer-specific code."""
     world = list(range(args.hosts))
     spares = list(range(args.hosts, args.hosts + args.spares))
     driver = SimWorldDriver(kill)
 
-    def restore(target):
-        t = Trainer.restore(mgr, step=target.step,
-                            rewrite_op=target.rewrite_op())
+    def on_restored(t, target):
         print(f"[supervisor] restored at step "
-              f"{int(t.upper.get('step'))} on hosts {target.hosts}")
-        return t
+              f"{t.checkpoint_step()} on hosts {target.hosts}")
 
-    sup = ClusterSupervisor(
-        world, manager=mgr, spares=spares,
+    sup = sess.supervise(
+        world, spares=spares,
         heartbeat_timeout=args.heartbeat_timeout,
         clock=driver.clock, n_shards=tr.shape.global_batch,
         allow_shrink=not args.no_shrink,
-        restore=restore, runner=tr)
+        on_restored=on_restored)
     driver.attach(sup)
-    if mgr.backend.latest_step() is None:
-        tr.save(block=True)   # baseline: a death before the first
+    if sess.latest_step() is None:
+        sess.snapshot(block=True)   # baseline: a death before the first
         # --ckpt-every commit still has a restore target
-    step = int(tr.upper.get("step"))
+    step = tr.checkpoint_step()
     while step < args.steps:
         tr = sup.runner
         m = tr.train_steps(1)
-        step = int(tr.upper.get("step"))
+        step = tr.checkpoint_step()
         print(f"step {m['step']:5.0f} loss {m['loss']:.4f} "
               f"hosts {sup.world}", flush=True)
-        if step % args.ckpt_every == 0 or step == args.steps:
-            tr.save(block=False)
+        sess.maybe_snapshot(final=step == args.steps)
         target = driver.tick(step)
         if target is not None \
                 and target.action is not FailureAction.HOT_SPARE:
-            step = int(sup.runner.upper.get("step"))  # rolled back
+            step = sup.runner.checkpoint_step()  # rolled back
     driver.warn_if_kill_pending()
     for inc in sup.incidents:
         print(f"[supervisor] incident {inc.action}: dead={inc.dead} "

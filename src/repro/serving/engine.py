@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import re
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -29,6 +30,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.api import register_app_kind
+from repro.api.app import RestoreContext
+from repro.api.errors import RestoreError
+from repro.api.session import CheckpointSession
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.configs import registry as cfg_registry
 from repro.models import model as M
@@ -250,7 +255,9 @@ class ServingEngine:
         # optional live-session checkpointing (core.async_snapshot):
         # manager drains snapshots in the background, lower's op-log (if
         # the engine was built through the logged runtime) rides along so
-        # a restore can replay CacheAlloc/Compile
+        # a restore can replay CacheAlloc/Compile. The engine does NOT
+        # hold a CheckpointSession of its own — one session owns an
+        # app's lifecycle, and that session is the caller's.
         self.manager = manager
         self.lower = lower
 
@@ -300,15 +307,31 @@ class ServingEngine:
         return {"kind": "serving", "arch": self.arch,
                 "n_slots": self.n_slots, "max_seq": self.max_seq}
 
+    # --- CheckpointableApp protocol (repro.api) ------------------------
+
+    def checkpoint_state(self) -> UpperHalf:
+        # session_state() is the dynamic hook the session prefers; this
+        # satisfies the protocol's required method with the same answer
+        return self.session_state()
+
+    def checkpoint_step(self) -> int:
+        return self.steps
+
+    def runtime_log(self):
+        from repro.core.oplog import OpLog
+        return self.lower.oplog if self.lower is not None else OpLog()
+
     def snapshot(self, block: bool = False):
         """Snapshot of live sessions at an engine-step boundary;
         non-blocking by default — decode keeps running while the
         pipeline encodes and writes. Returns the SnapshotHandle (None
-        when blocking, or if dropped under "skip" backpressure)."""
-        assert self.manager is not None, "construct with manager= to snapshot"
-        from repro.core.oplog import OpLog
-        log = self.lower.oplog if self.lower is not None else OpLog()
-        return self.manager.save(self.steps, self.session_state(), log,
+        when blocking, or if dropped under "skip" backpressure). Same
+        payload a ``CheckpointSession`` wrapping this engine would
+        take — the protocol methods are the single source."""
+        assert self.manager is not None, \
+            "construct with manager= to snapshot"
+        return self.manager.save(self.checkpoint_step(),
+                                 self.session_state(), self.runtime_log(),
                                  block=block, job_meta=self.job_meta())
 
     # --- restore (the Incarnation lifecycle, serving flavor) -----------
@@ -317,62 +340,38 @@ class ServingEngine:
     def restore(cls, manager, params, *, n_slots: Optional[int] = None,
                 step: Optional[int] = None, mesh=None, mesh_factory=None,
                 decode_workers: Optional[int] = None) -> "ServingEngine":
-        """Resume a serving process from a live-session checkpoint.
+        """Legacy shim: delegates to the public session API
+        (``repro.api.CheckpointSession.restore``), which resolves the
+        "serving" binder below through the app-kind registry.
 
         Same-geometry restore (``n_slots`` matches the checkpoint)
         rebinds cache contents and slot state directly. A different
         ``n_slots`` triggers **re-slotting**: the op-log replays with
         CacheAlloc/Compile rewritten to the new slot count, and every
-        live session re-enters through admission, which rebuilds its KV
-        slice by replaying prompt + generated tokens through prefill —
-        the serving analogue of elastic multi-device restore.
+        live session re-enters through admission — the serving analogue
+        of elastic multi-device restore. ``mesh``/``mesh_factory``
+        override the logged topology."""
+        warnings.warn(
+            "ServingEngine.restore is a legacy shim; use "
+            "repro.api.CheckpointSession.restore", DeprecationWarning,
+            stacklevel=2)
+        return CheckpointSession.from_manager(manager).restore(
+            step=step, expect_kind="serving", mesh_factory=mesh_factory,
+            decode_workers=decode_workers, params=params,
+            n_slots=n_slots, mesh=mesh)
 
-        ``mesh``/``mesh_factory`` override the logged topology (and are
-        required if the checkpoint came from an engine built outside
-        the logged runtime, whose op-log is empty)."""
-        from repro.core.incarnation import Incarnation
-        if mesh is not None and mesh_factory is None:
-            mesh_factory = lambda m=mesh: m
-        # peek at the manifest (cheap JSON) before materializing: on a
-        # re-slot restore the checkpoint's KV cache and slot bookkeeping
-        # are rebuilt from scratch, so their delta chains — the bulk of
-        # the payload — are skipped at decode, not decoded and dropped
-        step = manager.resolve_step(step)
-        job = manager.backend.get_manifest(step).get("job", {})
-        if job.get("kind") != "serving":
-            raise ValueError(f"not a serving checkpoint: {job!r}")
-        arch = job.get("arch")
-        if arch is None:
-            raise ValueError("checkpoint predates engine arch metadata; "
-                             "cannot rebuild the engine from it")
-        n_old, max_seq = int(job["n_slots"]), int(job["max_seq"])
-        n_new = int(n_slots) if n_slots is not None else n_old
-        reslot = n_new != n_old
-        inc = Incarnation(
-            manager, step=step, mesh_factory=mesh_factory,
-            decode_workers=decode_workers,
-            rewrite_op=_reslot_rewriter(n_old, n_new) if reslot else None,
-            skip_entries=("kv_cache", "sessions") if reslot else None)
-        inc.materialize()
-        lower = inc.build_lower()
-        cfg = _resolve_cfg(arch)
-        use_mesh = inc.mesh_or_none()
-        if use_mesh is None:
-            use_mesh = mesh
-        if use_mesh is None:
-            raise ValueError("op-log bound no mesh (engine was built "
-                             "outside the logged runtime); pass mesh=")
-        vexec = inc.last_compile("decode_step")
-        adopt = None
-        if vexec is not None:
-            vcache = inc.last_cache_alloc()
-            adopt = {"decode": lower.executable(vexec),
-                     "cache": (lower.cache(vcache) if vcache is not None
-                               else M.init_cache(cfg, n_new, max_seq)),
-                     "vexec": vexec, "vcache": vcache}
-        eng = cls(cfg, params, use_mesh, n_slots=n_new, max_seq=max_seq,
-                  manager=manager, lower=lower, arch=arch, _adopt=adopt)
-        eng.steps = int(inc.scalar("steps")) if inc.has_entry("steps") else 0
+    def bind(self, restore: RestoreContext) -> None:
+        """CheckpointableApp.bind: rebind the *complete* session state —
+        cache contents, slot bookkeeping, in-flight requests, waiting
+        queue — from a materialized restore context. On a re-slot
+        restore (this engine's slot count differs from the checkpoint's)
+        the skipped cache/slot entries are rebuilt instead: every former
+        in-flight session re-enters through admission, which replays its
+        prompt + generated tokens into its new slot."""
+        inc = restore.incarnation()
+        reslot = self.n_slots != int(restore.job["n_slots"])
+        self.steps = int(inc.scalar("steps")) if inc.has_entry("steps") \
+            else 0
 
         sched = (tree_from_paths(inc.entry_paths("sched"))
                  if inc.has_entry("sched") else {})
@@ -382,27 +381,26 @@ class ServingEngine:
                       for _, v in sorted(sched.get("queue", {}).items())]
 
         if not reslot:
-            host = fill_like(eng.cache, inc.entry_paths("kv_cache"))
-            eng.cache = jax.tree.map(
+            host = fill_like(self.cache, inc.entry_paths("kv_cache"))
+            self.cache = jax.tree.map(
                 lambda t, v: jnp.asarray(np.asarray(v), dtype=t.dtype),
-                eng.cache, host)
+                self.cache, host)
             sess = tree_from_paths(inc.entry_paths("sessions"))
-            eng.slot_pos = np.asarray(sess["slot_pos"], np.int32).copy()
-            eng.slot_tok = np.asarray(sess["slot_tok"],
-                                      np.int32).copy().reshape(n_new, 1)
+            self.slot_pos = np.asarray(sess["slot_pos"], np.int32).copy()
+            self.slot_tok = np.asarray(
+                sess["slot_tok"], np.int32).copy().reshape(self.n_slots, 1)
             for s, r in slot_reqs:
-                eng.slot_req[s] = r
-            eng.queue = queue_reqs
+                self.slot_req[s] = r
+            self.queue = queue_reqs
         else:
             # elastic re-slot: former in-flight sessions (slot order)
             # lead the queue, then the waiting requests; admission
             # replays each one's history into its new slot. Sessions
             # beyond the new slot count wait their turn — nothing drops.
-            eng.queue = [r for _, r in slot_reqs] + queue_reqs
-            eng._admit()
+            self.queue = [r for _, r in slot_reqs] + queue_reqs
+            self._admit()
         inc.release()   # every entry is rebound or rebuilt; drop the
-        eng.incarnation = inc  # host payload, keep timings + manifest
-        return eng
+        self.incarnation = inc  # host payload, keep timings + manifest
 
     def live_requests(self) -> List[Request]:
         """In-flight requests (slot order) + the waiting queue."""
@@ -521,3 +519,61 @@ class ServingEngine:
             max_steps -= 1
         if snapshot_every and self.manager is not None:
             self.manager.wait()
+
+
+@register_app_kind("serving")
+def _restore_engine(restore: RestoreContext, params,
+                    n_slots: Optional[int] = None,
+                    mesh=None) -> ServingEngine:
+    """The "serving" restore binder: the Incarnation lifecycle, serving
+    flavor. On a re-slot restore the checkpoint's KV cache and slot
+    bookkeeping are rebuilt from scratch, so their delta chains — the
+    bulk of the payload — are skipped at decode, not decoded and
+    dropped; the op-log replays with CacheAlloc/Compile rewritten to
+    the new slot count (composed with any session-level rewrite, e.g. a
+    supervisor's DataReassign rewrite)."""
+    job = restore.job
+    arch = job.get("arch")
+    if arch is None:
+        raise RestoreError("checkpoint predates engine arch metadata; "
+                           "cannot rebuild the engine from it")
+    n_old, max_seq = int(job["n_slots"]), int(job["max_seq"])
+    n_new = int(n_slots) if n_slots is not None else n_old
+    reslot = n_new != n_old
+
+    rewriters = [r for r in (restore.rewrite_op,
+                             _reslot_rewriter(n_old, n_new) if reslot
+                             else None) if r is not None]
+    rewrite = None
+    if rewriters:
+        rewrite = rewriters[0] if len(rewriters) == 1 else \
+            (lambda op: rewriters[1](rewriters[0](op)))
+    mesh_factory = None
+    if mesh is not None and restore.mesh_factory is None:
+        mesh_factory = lambda m=mesh: m  # noqa: E731
+
+    inc = restore.incarnation(
+        skip_entries=("kv_cache", "sessions") if reslot else None,
+        rewrite_op=rewrite, mesh_factory=mesh_factory)
+    inc.materialize()
+    lower = inc.build_lower()
+    cfg = _resolve_cfg(arch)
+    use_mesh = inc.mesh_or_none()
+    if use_mesh is None:
+        use_mesh = mesh
+    if use_mesh is None:
+        raise RestoreError("op-log bound no mesh (engine was built "
+                           "outside the logged runtime); pass mesh=")
+    vexec = inc.last_compile("decode_step")
+    adopt = None
+    if vexec is not None:
+        vcache = inc.last_cache_alloc()
+        adopt = {"decode": lower.executable(vexec),
+                 "cache": (lower.cache(vcache) if vcache is not None
+                           else M.init_cache(cfg, n_new, max_seq)),
+                 "vexec": vexec, "vcache": vcache}
+    eng = ServingEngine(cfg, params, use_mesh, n_slots=n_new,
+                        max_seq=max_seq, manager=restore.manager,
+                        lower=lower, arch=arch, _adopt=adopt)
+    eng.bind(restore)
+    return eng

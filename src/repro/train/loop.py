@@ -16,6 +16,7 @@ bitwise-identical to the uninterrupted run — tested.
 from __future__ import annotations
 
 import json
+import warnings
 from dataclasses import asdict, dataclass
 from typing import Any, Callable, Dict, Optional
 
@@ -24,10 +25,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.api import register_app_kind
+from repro.api.app import RestoreContext
+from repro.api.session import CheckpointSession
 from repro.configs import registry as cfg_registry
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core import (CheckpointManager, Incarnation, LowerHalf,
-                        UpperHalf)
+from repro.core import CheckpointManager, LowerHalf, OpLog, UpperHalf
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.models import model as M
 from repro.optim import (AdamWConfig, ScheduleConfig, abstract_opt_state,
@@ -148,28 +151,70 @@ class Trainer:
         return {k: float(np.asarray(jax.device_get(v)))
                 for k, v in metrics.items()}
 
-    # --- checkpoint / restore ------------------------------------------------
+    # --- CheckpointableApp protocol (repro.api) -----------------------------
+
+    def checkpoint_state(self) -> UpperHalf:
+        return self.upper
+
+    def checkpoint_step(self) -> int:
+        return int(self.upper.get("step"))
+
+    def runtime_log(self) -> OpLog:
+        return self.lower.oplog
 
     def job_meta(self) -> Dict[str, Any]:
-        return {"arch": self.job.arch, "shape_key": self.job.shape_key,
+        return {"kind": "train",
+                "arch": self.job.arch, "shape_key": self.job.shape_key,
                 "plan_key": self.job.plan_key,
                 "init_seed": self.job.init_seed,
                 "data_seed": self.job.data_seed}
 
+    def bind(self, restore: RestoreContext) -> None:
+        """CheckpointableApp.bind: rematerialize the upper half onto
+        this incarnation's (possibly different) mesh. Expects the
+        context's lower half already replayed — the "train" binder
+        orders the phases."""
+        inc = restore.incarnation()
+        ab_params = M.init_abstract(self.cfg)
+        logical = M.logical_specs(self.cfg)
+        params = inc.bind("params", ab_params, plan=self.plan,
+                          logical=logical)
+        ab_opt = abstract_opt_state(ab_params, self.opt_cfg)
+        olog = opt_logical_specs(logical, self.opt_cfg)
+        opt_state = inc.bind("opt_state", ab_opt, plan=self.plan,
+                             logical=olog)
+        self.upper.register("params", "params", params, logical)
+        self.upper.register("opt_state", "opt_state", opt_state, olog)
+        self.upper.register("step", "step", np.int64(inc.scalar("step")))
+        self.upper.register("data_cursor", "data_cursor",
+                            np.int64(inc.scalar("data_cursor")))
+        self.upper.register("rng_seed", "rng",
+                            np.int64(inc.scalar("rng_seed")))
+        inc.release()   # host payload rebound on device; don't hold the
+        self.incarnation = inc  # checkpoint's RAM for the life of the run
+
+    # --- checkpoint / restore ------------------------------------------------
+
     def save(self, block: bool = True) -> None:
         assert self.manager is not None
-        self.manager.save(int(self.upper.get("step")), self.upper,
-                          self.lower.oplog, block=block,
+        self.manager.save(self.checkpoint_step(), self.checkpoint_state(),
+                          self.runtime_log(), block=block,
                           job_meta=self.job_meta())
 
     def snapshot(self):
         """Non-blocking checkpoint at the current step boundary: pays
         only the device→staging capture; delta encode + backend writes
         overlap the next train_steps() on the pipeline threads. Returns
-        the SnapshotHandle (None if dropped under "skip" backpressure)."""
+        the SnapshotHandle (None if dropped under "skip" backpressure).
+
+        Same payload a ``CheckpointSession`` wrapping this trainer would
+        take — the protocol methods are the single source; the trainer
+        deliberately does NOT hold a session of its own (one session
+        owns an app's lifecycle, and that session is the caller's)."""
         assert self.manager is not None
-        return self.manager.save(int(self.upper.get("step")), self.upper,
-                                 self.lower.oplog, block=False,
+        return self.manager.save(self.checkpoint_step(),
+                                 self.checkpoint_state(),
+                                 self.runtime_log(), block=False,
                                  job_meta=self.job_meta())
 
     def apply_reassignment(self, assignment) -> None:
@@ -203,51 +248,18 @@ class Trainer:
                 step: Optional[int] = None,
                 decode_workers: Optional[int] = None,
                 rewrite_op: Optional[Callable] = None) -> "Trainer":
-        """Resume through the Incarnation lifecycle: materialize the
-        delta chain (parallel leaf decode), fresh lower half + op-log
-        replay (recompile, reapply runtime ops), rebind the upper half
-        onto the — possibly different — mesh. Phase timings land on
-        ``trainer.incarnation.timings``.
-
-        ``rewrite_op`` transforms logged ops before replay — the
-        elastic re-shard path: a supervisor SHRINK restore rewrites the
-        logged DataReassign onto the surviving hosts' assignment
-        (``RestoreTarget.rewrite_op``), the training twin of serving's
-        re-slot rewrite."""
-        inc = Incarnation(manager, step=step, mesh_factory=mesh_factory,
-                          decode_workers=decode_workers,
-                          rewrite_op=rewrite_op)
-        inc.materialize()
-        jm = inc.job
-        job = TrainJob(arch=jm["arch"], shape_key=jm["shape_key"],
-                       init_seed=jm.get("init_seed", 0),
-                       data_seed=jm.get("data_seed", 1234),
-                       plan_overrides=json.loads(jm["plan_key"])
-                       if jm.get("plan_key") else None)
-
-        # 1-2: fresh lower half + replay (recompile, reapply runtime ops)
-        lower = inc.build_lower()
-        vexec = inc.last_compile("train_step")
-        assert vexec is not None, "no train_step Compile in the log"
-
-        t = cls(job, None, None, manager=manager, _restored=(lower, vexec))
-
-        # 3: rematerialize the upper half on the (new) mesh
-        ab_params = M.init_abstract(t.cfg)
-        logical = M.logical_specs(t.cfg)
-        params = inc.bind("params", ab_params, plan=t.plan, logical=logical)
-        ab_opt = abstract_opt_state(ab_params, t.opt_cfg)
-        olog = opt_logical_specs(logical, t.opt_cfg)
-        opt_state = inc.bind("opt_state", ab_opt, plan=t.plan, logical=olog)
-        t.upper.register("params", "params", params, logical)
-        t.upper.register("opt_state", "opt_state", opt_state, olog)
-        t.upper.register("step", "step", np.int64(inc.scalar("step")))
-        t.upper.register("data_cursor", "data_cursor",
-                         np.int64(inc.scalar("data_cursor")))
-        t.upper.register("rng_seed", "rng", np.int64(inc.scalar("rng_seed")))
-        inc.release()   # host payload rebound on device; don't hold the
-        t.incarnation = inc  # checkpoint's RAM for the life of the run
-        return t
+        """Legacy shim: delegates to the public session API
+        (``repro.api.CheckpointSession.restore``), which resolves the
+        "train" binder below through the app-kind registry. Phase
+        timings land on ``trainer.incarnation.timings``; ``rewrite_op``
+        transforms logged ops before replay (elastic re-shard)."""
+        warnings.warn(
+            "Trainer.restore is a legacy shim; use "
+            "repro.api.CheckpointSession.restore", DeprecationWarning,
+            stacklevel=2)
+        return CheckpointSession.from_manager(manager).restore(
+            step=step, expect_kind="train", mesh_factory=mesh_factory,
+            rewrite_op=rewrite_op, decode_workers=decode_workers)
 
     # --- observability ---------------------------------------------------------
 
@@ -266,3 +278,29 @@ class Trainer:
 def _flatten(tree):
     from repro.core.split_state import flatten_with_paths
     return flatten_with_paths(tree)
+
+
+@register_app_kind("train")
+def _restore_trainer(restore: RestoreContext) -> Trainer:
+    """The "train" restore binder: the Incarnation lifecycle, trainer
+    flavor — materialize the delta chain (parallel leaf decode), fresh
+    lower half + op-log replay (recompile, reapply runtime ops), then
+    ``Trainer.bind`` rematerializes the upper half on the (new) mesh."""
+    inc = restore.incarnation()
+    inc.materialize()
+    jm = restore.job
+    job = TrainJob(arch=jm["arch"], shape_key=jm["shape_key"],
+                   init_seed=jm.get("init_seed", 0),
+                   data_seed=jm.get("data_seed", 1234),
+                   plan_overrides=json.loads(jm["plan_key"])
+                   if jm.get("plan_key") else None)
+
+    # 1-2: fresh lower half + replay (recompile, reapply runtime ops)
+    lower = inc.build_lower()
+    vexec = inc.last_compile("train_step")
+    assert vexec is not None, "no train_step Compile in the log"
+
+    t = Trainer(job, None, None, manager=restore.manager,
+                _restored=(lower, vexec))
+    t.bind(restore)   # 3: upper half onto the (new) mesh
+    return t

@@ -1,0 +1,174 @@
+"""Policy validation + URI-spec backend resolution: the configuration
+half of the public API fails at the line that wrote it, with an
+actionable message — never deep inside the first chained save."""
+import numpy as np
+import pytest
+
+from repro.api import (CheckpointSession, Policy, PolicyError,
+                       parse_store_spec, resolve_backend)
+from repro.core.backends.localfs import LocalFSBackend
+from repro.core.backends.sharded import ShardedBackend
+
+
+# --- Policy field validation -------------------------------------------------
+
+@pytest.mark.parametrize("kw,needle", [
+    (dict(interval=0), "interval"),
+    (dict(interval=-5), "interval"),
+    (dict(chain=0), "chain"),
+    (dict(keep_last=0), "keep_last"),
+    (dict(backpressure="drop"), "backpressure"),
+    (dict(writers=0), "writers"),
+    (dict(sparse_chunk_bytes=4096), "chain"),           # chain off
+    (dict(sparse_min_bytes=1 << 16), "chain"),
+    (dict(chain=4, sparse=False, sparse_chunk_bytes=4096), "sparse"),
+    (dict(codecs={"opt_state": "no-such-codec"}), "codec"),
+])
+def test_bad_policy_raises_policyerror(kw, needle):
+    with pytest.raises(PolicyError, match=needle):
+        Policy(**kw)
+
+
+def test_policy_error_is_valueerror():
+    # the hierarchy adds ways to catch, it never removes one
+    with pytest.raises(ValueError):
+        Policy(interval=0)
+
+
+def test_default_policy_valid_and_frozen():
+    p = Policy()
+    with pytest.raises(AttributeError):
+        p.chain = 2  # type: ignore[misc]
+
+
+def test_with_revalidates():
+    p = Policy(chain=4)
+    assert p.with_(keep_last=3).keep_last == 3
+    with pytest.raises(PolicyError, match="chain"):
+        p.with_(chain=0)
+
+
+def test_build_manager_maps_fields(tmp_path):
+    p = Policy(chain=4, keep_last=3, backpressure="skip", writers=2,
+               compress=False, async_save=False,
+               codecs={"opt_state": "int8"})
+    mgr = p.build_manager(LocalFSBackend(str(tmp_path)))
+    try:
+        assert mgr.pipeline.delta_base_interval == 4
+        assert mgr.pipeline.keep_last == 3
+        assert mgr.pipeline.backpressure == "skip"
+        assert mgr.pipeline.compress is False
+        assert mgr.codec_by_kind == {"opt_state": "int8"}
+        assert mgr.async_save is False
+    finally:
+        mgr.close()
+
+
+def test_sparse_geometry_still_validated_at_build(tmp_path):
+    # the pipeline's own geometry check is routed through PolicyError
+    with pytest.raises(PolicyError, match="sparse_chunk_bytes"):
+        Policy(chain=4, sparse_chunk_bytes=1000).build_manager(
+            LocalFSBackend(str(tmp_path)))
+
+
+# --- store specs -------------------------------------------------------------
+
+def test_parse_store_spec():
+    scheme, path, params = parse_store_spec(
+        "sharded:/data/job?hosts=4&replicate=1")
+    assert (scheme, path) == ("sharded", "/data/job")
+    assert params == {"hosts": "4", "replicate": "1"}
+
+
+@pytest.mark.parametrize("spec", ["", "nope", ":", "localfs:",
+                                  ":/path", 42, None])
+def test_malformed_spec_is_policyerror(spec):
+    with pytest.raises(PolicyError, match="spec"):
+        parse_store_spec(spec)
+
+
+def test_unknown_scheme_names_register_hook(tmp_path):
+    with pytest.raises(PolicyError, match="register_backend"):
+        resolve_backend(f"s3:{tmp_path}")
+
+
+def test_unknown_param_lists_accepted(tmp_path):
+    with pytest.raises(PolicyError, match="hosts"):
+        resolve_backend(f"localfs:{tmp_path}?hosts=4")
+
+
+def test_bad_param_value_is_policyerror(tmp_path):
+    with pytest.raises(PolicyError, match="integer"):
+        resolve_backend(f"sharded:{tmp_path}?hosts=lots")
+    with pytest.raises(PolicyError, match="boolean"):
+        resolve_backend(f"sharded:{tmp_path}?replicate=maybe")
+    # range checks too — hosts=0 would otherwise surface as a
+    # modulo-by-zero at the first blob write, writers=0 as a raw
+    # ThreadPoolExecutor ValueError
+    with pytest.raises(PolicyError, match="hosts=0"):
+        resolve_backend(f"sharded:{tmp_path}?hosts=0")
+    with pytest.raises(PolicyError, match="writers=0"):
+        resolve_backend(f"sharded:{tmp_path}?writers=0")
+
+
+def test_resolve_builds_both_packages(tmp_path):
+    lf = resolve_backend(f"localfs:{tmp_path}/a")
+    assert isinstance(lf, LocalFSBackend)
+    sh = resolve_backend(f"sharded:{tmp_path}/b?hosts=3&replicate=1")
+    assert isinstance(sh, ShardedBackend)
+    assert sh.n_hosts == 3 and sh.replicate is True
+
+
+def test_malformed_query_piece(tmp_path):
+    with pytest.raises(PolicyError, match="key=value"):
+        resolve_backend(f"localfs:{tmp_path}?fsync")
+
+
+def test_policy_replicate_default_flows_into_spec(tmp_path):
+    sess = CheckpointSession(f"sharded:{tmp_path}/r?hosts=2",
+                             Policy(replicate=True))
+    try:
+        assert sess.backend.replicate is True
+    finally:
+        sess.close()
+    # an explicit spec param wins over the policy default
+    sess = CheckpointSession(f"sharded:{tmp_path}/r2?hosts=2&replicate=0",
+                             Policy(replicate=True))
+    try:
+        assert sess.backend.replicate is False
+    finally:
+        sess.close()
+
+
+def test_replicate_request_on_nonreplicating_store_is_loud(tmp_path):
+    """Policy(replicate=True) must never be silently unservable — a
+    store that can't replicate (wrong scheme, or a pre-built instance
+    with replication off) is an error now, not at the first lost host."""
+    with pytest.raises(PolicyError, match="does not replicate"):
+        CheckpointSession(f"localfs:{tmp_path}/nr", Policy(replicate=True))
+    with pytest.raises(PolicyError, match="does not replicate"):
+        CheckpointSession(ShardedBackend(str(tmp_path / "nr2"), n_hosts=2,
+                                         replicate=False),
+                          Policy(replicate=True))
+    # a pre-built instance that DOES replicate satisfies the request
+    sess = CheckpointSession(ShardedBackend(str(tmp_path / "ok"),
+                                            n_hosts=2, replicate=True),
+                             Policy(replicate=True))
+    try:
+        assert sess.backend.replicate is True
+    finally:
+        sess.close()
+
+
+def test_third_party_backend_registers_without_core(tmp_path):
+    from repro.api import register_backend
+    from repro.api.registry import BACKEND_SCHEMES
+
+    @register_backend("memdir")
+    def _memdir(path, *, depth="1"):
+        return ("memdir", path, int(depth))
+
+    try:
+        assert resolve_backend("memdir:/x?depth=3") == ("memdir", "/x", 3)
+    finally:
+        BACKEND_SCHEMES.pop("memdir", None)

@@ -1,0 +1,77 @@
+"""API-surface lock: ``repro.api``'s exported names and signatures are
+asserted against a checked-in snapshot (tests/api_surface.json), so an
+accidental breaking change to the public surface fails loudly in CI.
+
+A *deliberate* surface change regenerates the snapshot:
+
+    PYTHONPATH=src python tests/test_api_surface.py --update
+"""
+import inspect
+import json
+import os
+
+SNAPSHOT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "api_surface.json")
+
+
+def build_surface():
+    import repro.api as api
+    out = {}
+    for name in sorted(api.__all__):
+        obj = getattr(api, name)
+        if inspect.ismodule(obj):
+            out[name] = {"type": "module"}
+        elif isinstance(obj, type):
+            entry = {
+                "type": "class",
+                "bases": [b.__name__ for b in obj.__bases__],
+                "methods": sorted(
+                    n for n, v in vars(obj).items()
+                    if not n.startswith("_")
+                    and (callable(v)
+                         or isinstance(v, (classmethod, staticmethod,
+                                           property)))),
+            }
+            # Protocol classes have synthesized __init__s whose repr
+            # varies across Python versions; lock members only
+            if not getattr(obj, "_is_protocol", False) and \
+                    obj.__init__ is not object.__init__:
+                try:
+                    entry["init"] = str(inspect.signature(obj.__init__))
+                except (TypeError, ValueError):
+                    pass
+            out[name] = entry
+        elif callable(obj):
+            out[name] = {"type": "function",
+                         "sig": str(inspect.signature(obj))}
+        else:
+            out[name] = {"type": type(obj).__name__}
+    return out
+
+
+def test_api_surface_matches_snapshot():
+    with open(SNAPSHOT) as f:
+        locked = json.load(f)
+    current = build_surface()
+    added = sorted(set(current) - set(locked))
+    removed = sorted(set(locked) - set(current))
+    changed = sorted(n for n in set(locked) & set(current)
+                     if locked[n] != current[n])
+    assert not (added or removed or changed), (
+        f"repro.api surface drifted: added={added} removed={removed} "
+        f"changed={changed}. If this change is deliberate, regenerate "
+        f"the lock: PYTHONPATH=src python tests/test_api_surface.py "
+        f"--update — and say so in the PR. Details: " + json.dumps(
+            {n: {"locked": locked.get(n), "current": current.get(n)}
+             for n in (changed or added or removed)}, indent=2))
+
+
+if __name__ == "__main__":
+    import sys
+    if "--update" in sys.argv:
+        with open(SNAPSHOT, "w") as f:
+            json.dump(build_surface(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {SNAPSHOT}")
+    else:
+        print(json.dumps(build_surface(), indent=2, sort_keys=True))

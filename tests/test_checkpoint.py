@@ -143,3 +143,23 @@ def test_bfloat16_tensor_roundtrip(backend):
     assert str(back.dtype) == "bfloat16"
     np.testing.assert_array_equal(np.asarray(x, np.float32),
                                   np.asarray(back, np.float32))
+
+
+def test_structure_handles_scalar_and_nonarray_leaves():
+    """Regression: UpperHalf.structure() used to route scalar/non-array
+    leaves through jax.device_get via an inverted hasattr branch; plain
+    int/float/list leaves must describe cleanly (and array leaves must
+    not be transferred off device just to read shape/dtype)."""
+    import jax.numpy as jnp
+    up = UpperHalf()
+    up.register("scalars", "step", {"i": 7, "f": 2.5})
+    up.register("np_scalar", "rng", np.int64(3))
+    up.register("arr", "params", {"w": jnp.zeros((2, 3), jnp.float32)})
+    desc = up.structure()
+    assert desc["scalars"]["leaves"]["['i']"]["shape"] == []
+    assert "int" in desc["scalars"]["leaves"]["['i']"]["dtype"]
+    assert desc["scalars"]["leaves"]["['f']"]["shape"] == []
+    assert "float" in desc["scalars"]["leaves"]["['f']"]["dtype"]
+    assert desc["np_scalar"]["leaves"][""]["shape"] == []
+    assert desc["arr"]["leaves"]["['w']"] == {"shape": [2, 3],
+                                              "dtype": "float32"}

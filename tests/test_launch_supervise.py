@@ -119,3 +119,66 @@ def test_train_cli_supervised_shrink_end_to_end(tmp_path, capsys):
     assert rc == 0
     assert "shrink: dead=[1]" in out
     assert "done at step 8" in out
+
+
+# --- the shared store surface (launch.common) --------------------------------
+
+def _store_parse(argv):
+    from repro.launch.common import add_store_args
+    ap = argparse.ArgumentParser()
+    add_store_args(ap)
+    return ap.parse_args(argv)
+
+
+def test_store_uri_passes_through():
+    from repro.launch.common import resolve_store
+    spec, err = resolve_store(_store_parse(["--store", "sharded:/x?hosts=4"]),
+                              "t")
+    assert err is None and spec == "sharded:/x?hosts=4"
+
+
+def test_legacy_ckpt_dir_folds_into_spec():
+    from repro.launch.common import resolve_store
+    spec, err = resolve_store(
+        _store_parse(["--ckpt-dir", "/x", "--backend", "sharded"]), "t")
+    assert err is None and spec == "sharded:/x"
+    spec, err = resolve_store(_store_parse(["--ckpt-dir", "/x"]), "t")
+    assert err is None and spec == "localfs:/x"
+
+
+def test_store_and_ckpt_dir_conflict_rejected():
+    from repro.launch.common import resolve_store
+    spec, err = resolve_store(
+        _store_parse(["--store", "localfs:/a", "--ckpt-dir", "/b"]), "t")
+    assert spec is None and "not both" in err
+
+
+def test_bad_store_spec_exits_with_actionable_message(tmp_path):
+    from repro.launch.common import build_session
+    sess, err = build_session("s3:/nope", "t")
+    assert sess is None and "register_backend" in err
+
+
+def test_bad_policy_flags_become_exit_messages(tmp_path):
+    """Invalid cadence/retention flags are one-line launcher errors, not
+    tracebacks — and interval=0 means 'cadence disabled' on BOTH
+    launchers (the shared boundary owns the normalization)."""
+    from repro.launch.common import build_session
+    sess, err = build_session(f"localfs:{tmp_path}", "t", keep_last=0)
+    assert sess is None and err.startswith("[t]") and "keep_last" in err
+    sess, err = build_session(f"localfs:{tmp_path}", "t", interval=-1)
+    assert sess is None and err.startswith("[t]") and "interval" in err
+    sess, err = build_session(f"localfs:{tmp_path}", "t", interval=0)
+    assert err is None and sess.policy.interval is None
+    sess.close()
+
+
+def test_resume_parsing_shared():
+    from repro.launch.common import parse_resume_arg
+    assert parse_resume_arg(_store_parse([]), "t") == (False, None, None)
+    assert parse_resume_arg(_store_parse(["--resume"]), "t") == \
+        (True, None, None)
+    assert parse_resume_arg(_store_parse(["--resume", "7"]), "t") == \
+        (True, 7, None)
+    ok, step, err = parse_resume_arg(_store_parse(["--resume", "x"]), "t")
+    assert ok and step is None and "expected 'latest'" in err
