@@ -32,11 +32,30 @@ from repro.api.errors import PolicyError
 BACKEND_SCHEMES: Dict[str, Callable[..., Any]] = {}
 
 
-def register_backend(scheme: str) -> Callable:
+def _registrant(fn: Callable) -> str:
+    mod = getattr(fn, "__module__", None) or "?"
+    name = getattr(fn, "__qualname__", None) or repr(fn)
+    return f"{mod}.{name}"
+
+
+def register_backend(scheme: str, *, replace: bool = False) -> Callable:
     """Register ``factory(path, **params) -> CheckpointBackend`` under a
     URI scheme. Query parameters arrive as strings; the factory owns
-    their conversion (raise ``PolicyError`` on a bad value)."""
+    their conversion (raise ``PolicyError`` on a bad value).
+
+    A scheme is a global name: registering a *different* factory under a
+    taken scheme raises ``PolicyError`` instead of silently shadowing
+    whoever got there first (re-registering the same callable — e.g. a
+    module reimported under test — is a no-op). Pass ``replace=True`` to
+    override deliberately."""
     def deco(factory: Callable) -> Callable:
+        existing = BACKEND_SCHEMES.get(scheme)
+        if existing is not None and existing is not factory and not replace:
+            raise PolicyError(
+                f"backend scheme {scheme!r} is already registered by "
+                f"{_registrant(existing)}; pick a different scheme, or "
+                f"pass register_backend({scheme!r}, replace=True) to "
+                "override it deliberately")
         BACKEND_SCHEMES[scheme] = factory
         return factory
     return deco
@@ -181,11 +200,35 @@ _LAZY_KINDS = {
 }
 
 
-def register_app_kind(kind: str) -> Callable:
+def register_app_kind(kind: str, *, replace: bool = False) -> Callable:
     """Register the restore binder for a checkpoint kind. The binder
     receives a ``RestoreContext`` (plus any kwargs the caller passed to
-    ``CheckpointSession.restore``) and returns the rebuilt app."""
+    ``CheckpointSession.restore``) and returns the rebuilt app.
+
+    A kind names a manifest format, so collisions are real bugs:
+    registering a *different* binder under a taken kind — including the
+    built-in lazy kinds, whether or not their module has loaded yet —
+    raises ``PolicyError`` instead of silently shadowing the first
+    registrant (re-registering the same callable is a no-op). Pass
+    ``replace=True`` to override deliberately; a replaced built-in stays
+    replaced even if its home module is imported later."""
     def deco(binder: Callable) -> Callable:
+        home = _LAZY_KINDS.get(kind)
+        if home is not None and getattr(binder, "__module__", None) == home:
+            # the built-in module registering its own binder: first load
+            # wins, but never clobber a deliberate replace=True override
+            APP_KINDS.setdefault(kind, binder)
+            return binder
+        existing = APP_KINDS.get(kind)
+        clash = (existing is not None and existing is not binder) \
+            or (existing is None and home is not None)
+        if clash and not replace:
+            owner = (_registrant(existing) if existing is not None
+                     else f"the built-in binder in {home}")
+            raise PolicyError(
+                f"app kind {kind!r} is already registered by {owner}; "
+                f"pick a different kind, or pass register_app_kind("
+                f"{kind!r}, replace=True) to override it deliberately")
         APP_KINDS[kind] = binder
         return binder
     return deco

@@ -10,7 +10,9 @@ from repro.configs.registry import (
     all_cells,
     all_configs,
     get_config,
+    get_matrix_config,
     get_shape,
     get_smoke_config,
+    resolve_config,
     skipped_cells,
 )

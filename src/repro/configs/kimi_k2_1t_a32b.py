@@ -44,3 +44,21 @@ def smoke_config() -> ModelConfig:
         experts_per_token=2,
         n_shared_experts=1,
     )
+
+
+def matrix_config() -> ModelConfig:
+    """Conformance-matrix tiny: keeps top-k>1 routing (the second MoE
+    row of the matrix — llama4 covers top-1), floor everything else."""
+    return CONFIG.replace(
+        name=ARCH_ID + "-matrix",
+        n_layers=1,
+        d_model=32,
+        n_heads=2,
+        n_kv_heads=1,
+        head_dim=16,
+        d_ff=16,
+        vocab_size=64,
+        n_experts=4,
+        experts_per_token=2,
+        n_shared_experts=1,
+    )

@@ -45,3 +45,21 @@ def smoke_config() -> ModelConfig:
         experts_per_token=1,
         n_shared_experts=1,
     )
+
+
+def matrix_config() -> ModelConfig:
+    """Conformance-matrix tiny: top-1 routing + shared expert kept (the
+    MoE C/R surface), everything else at the floor."""
+    return CONFIG.replace(
+        name=ARCH_ID + "-matrix",
+        n_layers=1,
+        d_model=32,
+        n_heads=2,
+        n_kv_heads=1,
+        head_dim=16,
+        d_ff=32,
+        vocab_size=64,
+        n_experts=2,
+        experts_per_token=1,
+        n_shared_experts=1,
+    )

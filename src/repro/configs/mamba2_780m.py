@@ -39,3 +39,16 @@ def smoke_config() -> ModelConfig:
         ssm_head_dim=16,
         vocab_size=256,
     )
+
+
+def matrix_config() -> ModelConfig:
+    """Conformance-matrix tiny: the SSD scan + conv state path at the
+    floor (d_inner=64, 8 heads of 8)."""
+    return CONFIG.replace(
+        name=ARCH_ID + "-matrix",
+        n_layers=1,
+        d_model=32,
+        ssm_state=8,
+        ssm_head_dim=8,
+        vocab_size=64,
+    )

@@ -46,3 +46,21 @@ def smoke_config() -> ModelConfig:
         attn_window=32,
         rglru_width=64,
     )
+
+
+def matrix_config() -> ModelConfig:
+    """Conformance-matrix tiny: one full (rglru, rglru, attn) group so
+    both block kinds (RG-LRU recurrence + windowed attention) sit in
+    every checkpoint cell."""
+    return CONFIG.replace(
+        name=ARCH_ID + "-matrix",
+        n_layers=3,
+        d_model=32,
+        n_heads=2,
+        n_kv_heads=1,
+        head_dim=16,
+        d_ff=64,
+        vocab_size=64,
+        attn_window=8,
+        rglru_width=32,
+    )

@@ -35,6 +35,35 @@ def get_smoke_config(arch_id: str) -> ModelConfig:
     return importlib.import_module(_MODULES[arch_id]).smoke_config()
 
 
+def get_matrix_config(arch_id: str) -> ModelConfig:
+    """Conformance-matrix tiny variant: smaller than smoke, sized so a
+    full C/R torture cell (train + restore, or serve + re-slot) runs in
+    seconds on CPU. Falls back to the smoke config for arch modules
+    that haven't defined one."""
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[arch_id])
+    fn = getattr(mod, "matrix_config", None)
+    return fn() if fn is not None else mod.smoke_config()
+
+
+def resolve_config(arch: str) -> ModelConfig:
+    """One resolver for every ``arch`` string a job can carry: a bare
+    registry id gives the published config; an id with a ``-smoke`` or
+    ``-matrix`` suffix gives that reduced variant. Checkpoint metadata
+    stores these strings, so both the trainer and the serving engine
+    must resolve them identically — this is the single place."""
+    if arch in _MODULES:
+        return get_config(arch)
+    if arch.endswith("-smoke"):
+        return get_smoke_config(arch.removesuffix("-smoke"))
+    if arch.endswith("-matrix"):
+        return get_matrix_config(arch.removesuffix("-matrix"))
+    raise KeyError(
+        f"unknown arch {arch!r}; known: {sorted(_MODULES)} "
+        "(optionally with a -smoke or -matrix suffix)")
+
+
 def all_configs() -> Dict[str, ModelConfig]:
     return {a: get_config(a) for a in ARCH_IDS}
 

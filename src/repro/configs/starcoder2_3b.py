@@ -40,3 +40,19 @@ def smoke_config() -> ModelConfig:
         d_ff=256,
         vocab_size=256,
     )
+
+
+def matrix_config() -> ModelConfig:
+    """Conformance-matrix tiny: the smallest same-family config that
+    still exercises every C/R-relevant code path (GQA + biases here),
+    sized so a full torture cell compiles and runs in seconds on CPU."""
+    return CONFIG.replace(
+        name=ARCH_ID + "-matrix",
+        n_layers=1,
+        d_model=32,
+        n_heads=2,
+        n_kv_heads=1,
+        head_dim=16,
+        d_ff=64,
+        vocab_size=64,
+    )

@@ -48,3 +48,22 @@ def smoke_config() -> ModelConfig:
         encoder_seq=24,
         frontend_dim=64,
     )
+
+
+def matrix_config() -> ModelConfig:
+    """Conformance-matrix tiny: one encoder + one decoder layer keeps
+    the cross-attention cache (the enc-dec-specific C/R payload) in
+    every matrix cell."""
+    return CONFIG.replace(
+        name=ARCH_ID + "-matrix",
+        n_layers=1,
+        n_encoder_layers=1,
+        d_model=32,
+        n_heads=2,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=64,
+        vocab_size=64,
+        encoder_seq=8,
+        frontend_dim=32,
+    )

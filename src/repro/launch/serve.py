@@ -103,10 +103,7 @@ def main(argv=None) -> int:
             return 2
 
     # arguments are sound — now pay jax init + param construction
-    if args.arch in cfg_registry.ARCH_IDS:
-        cfg = cfg_registry.get_config(args.arch)
-    else:
-        cfg = cfg_registry.get_smoke_config(args.arch.removesuffix("-smoke"))
+    cfg = cfg_registry.resolve_config(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     n_dev = len(jax.devices())
 

@@ -136,9 +136,7 @@ def serve_input_specs(cfg: ModelConfig, shape: ShapeConfig):
 # ---------------------------------------------------------------------------
 
 def _resolve_cfg(arch: str) -> ModelConfig:
-    if arch in cfg_registry.ARCH_IDS:
-        return cfg_registry.get_config(arch)
-    return cfg_registry.get_smoke_config(arch.removesuffix("-smoke"))
+    return cfg_registry.resolve_config(arch)
 
 
 @register_step_fn("prefill_step")

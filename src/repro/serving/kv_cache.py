@@ -80,10 +80,7 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
 
 def allocate_cache(arch: str, batch: int, max_seq: int, lower) -> Any:
     """Materialize a zeroed cache on the lower half's mesh (CacheAlloc)."""
-    if arch in cfg_registry.ARCH_IDS:
-        cfg = cfg_registry.get_config(arch)
-    else:
-        cfg = cfg_registry.get_smoke_config(arch.removesuffix("-smoke"))
+    cfg = cfg_registry.resolve_config(arch)
     try:
         mesh = lower.mesh
     except Exception:

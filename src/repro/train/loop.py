@@ -53,9 +53,7 @@ class TrainJob:
 
 
 def _resolve_cfg(arch: str) -> ModelConfig:
-    if arch in cfg_registry.ARCH_IDS:
-        return cfg_registry.get_config(arch)
-    return cfg_registry.get_smoke_config(arch.removesuffix("-smoke"))
+    return cfg_registry.resolve_config(arch)
 
 
 class Trainer:

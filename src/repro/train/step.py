@@ -283,8 +283,7 @@ def _plan_from_key(cfg, shape, mesh, plan_key: str) -> ParallelPlan:
 
 @register_step_fn("train_step")
 def _build_train_step(arch: str, shape_key: str, plan_key: str, lower):
-    cfg = cfg_registry.get_config(arch) if arch in cfg_registry.ARCH_IDS \
-        else cfg_registry.get_smoke_config(arch.removesuffix("-smoke"))
+    cfg = cfg_registry.resolve_config(arch)
     shape = cfg_registry.get_shape(shape_key)
     mesh = lower.mesh
     plan = _plan_from_key(cfg, shape, mesh, plan_key)

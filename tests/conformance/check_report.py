@@ -1,0 +1,59 @@
+#!/usr/bin/env python3
+"""CI gate over the conformance-matrix report (stdlib only).
+
+    python tests/conformance/check_report.py CONFORMANCE_matrix.json \
+        [expected_cells.json]
+
+Reads the per-cell JSON the pytest plugin wrote (``--conformance-report``)
+and fails when any pinned — previously green — cell is missing from the
+run (deleted, deselected, collection error) or did not pass (failed OR
+skipped: a skip on a pinned cell is a silent coverage hole, which is
+exactly what this gate exists to catch). Failures on unpinned cells
+(e.g. the slow axis, when it ran) fail too; unpinned passes are ignored.
+"""
+import json
+import os
+import sys
+
+
+def main(argv):
+    if len(argv) < 2 or argv[1] in ("-h", "--help"):
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    report_path = argv[1]
+    expected_path = argv[2] if len(argv) > 2 else os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "expected_cells.json")
+    with open(report_path) as f:
+        report = json.load(f)
+    with open(expected_path) as f:
+        expected = json.load(f)
+    cells = report.get("cells", {})
+
+    bad = []
+    for cid in expected:
+        rec = cells.get(cid)
+        if rec is None:
+            bad.append((cid, "MISSING — not collected (deleted, "
+                             "deselected, or collection error)"))
+        elif rec.get("outcome") != "passed":
+            bad.append((cid, str(rec.get("outcome")).upper()))
+    for cid, rec in sorted(cells.items()):
+        if cid not in expected and rec.get("outcome") \
+                not in ("passed", "skipped"):
+            bad.append((cid, f"{str(rec.get('outcome')).upper()} "
+                             "(unpinned cell)"))
+
+    n_pass = sum(1 for r in cells.values() if r.get("outcome") == "passed")
+    print(f"conformance matrix: {n_pass}/{len(cells)} cells passed, "
+          f"{len(expected)} pinned")
+    if bad:
+        print("\nGATE FAILED:", file=sys.stderr)
+        for cid, why in bad:
+            print(f"  {cid}: {why}", file=sys.stderr)
+        return 1
+    print("all pinned cells green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,200 @@
+"""The application side of the conformance matrix: how each config
+family builds, advances and hashes its apps.
+
+This module is deliberately the ONLY one in ``tests/conformance`` that
+may import beyond ``repro.api`` — and even here the allowlist stops at
+the *application* layer (``repro.train.loop``, ``repro.serving.engine``,
+``repro.configs``, ``repro.models``): touching ``repro.core`` anywhere
+in this package is an import-scan failure, because apps going through
+the public session surface must never need the internals.
+
+Every family uses its ``<arch>-matrix`` config (1-layer, d_model=32
+class) so a full cell — build, train, snapshot, restore, continue —
+is XLA-compile-bound, not step-bound, and the fast subset stays inside
+tier-1.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import os
+import sys
+from typing import Any, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.train.loop import Trainer, TrainJob
+from repro.serving.engine import Request, ServingEngine
+from repro.configs import resolve_config
+from repro.models import model as M
+
+from .driver import ElasticDrive, FamilySpec, ShrinkDrive, TrainDrive
+
+_EXAMPLES = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))), "examples")
+if _EXAMPLES not in sys.path:
+    sys.path.insert(0, _EXAMPLES)
+import rl_actor_learner as rl  # noqa: E402  (registers its app kind)
+
+# family -> registry arch (the -matrix suffix resolves the tiny config)
+ARCHS: Dict[str, str] = {
+    "attention": "starcoder2-3b-matrix",
+    "moe": "llama4-scout-17b-a16e-matrix",
+    "moe-topk": "kimi-k2-1t-a32b-matrix",
+    "ssm": "mamba2-780m-matrix",
+    "rglru": "recurrentgemma-9b-matrix",
+    "encdec": "whisper-base-matrix",
+}
+THIRD_PARTY = "thirdparty"
+SHAPE_KEY = "train_s8_b2"            # parses as seq=8, global_batch=2
+N_SHARDS = 2                          # == global_batch (data-layout law)
+
+
+# --- trainer side -----------------------------------------------------------
+
+def _fresh_trainer(arch: str) -> Trainer:
+    t = Trainer(TrainJob(arch=arch, shape_key=SHAPE_KEY), (1, 1),
+                ("data", "model"))
+    t.init_state()
+    return t
+
+
+def _advance_trainer(t: Trainer, n: int) -> None:
+    t.train_steps(n)
+
+
+def _digest_trainer(t: Trainer) -> str:
+    """Params + optimizer + counters: the complete semantic state, so a
+    cell can't pass on params alone while the data cursor drifted."""
+    h = hashlib.blake2b(digest_size=16)
+    for entry in ("params", "opt_state"):
+        leaves = jax.tree_util.tree_flatten_with_path(
+            t.upper.get(entry))[0]
+        for path, leaf in leaves:
+            h.update(jax.tree_util.keystr(path).encode())
+            h.update(np.ascontiguousarray(
+                np.asarray(jax.device_get(leaf))).tobytes())
+    h.update(str(int(t.upper.get("step"))).encode())
+    h.update(str(int(t.upper.get("data_cursor"))).encode())
+    return h.hexdigest()
+
+
+def _round_robin(hosts: Tuple[int, ...]) -> List[Tuple[int, int]]:
+    return [(hosts[i % len(hosts)], i) for i in range(N_SHARDS)]
+
+
+def _check_shrink_assignment(t2: Trainer, target: Any) -> None:
+    # the logged DataReassign must have been rewritten onto survivors
+    got = sorted(map(tuple, t2.lower.data_assignment))
+    want = sorted(_round_robin(tuple(target.hosts)))
+    assert got == want, f"shard assignment {got}, wanted {want}"
+
+
+# --- serving side (elastic re-slot) -----------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _params(arch: str):
+    return M.init_params(resolve_config(arch), jax.random.PRNGKey(0))
+
+
+_N_REQS, _PROMPT, _MAX_NEW, _MAX_SEQ = 3, 4, 6, 32
+
+
+def _requests(arch: str) -> List[Request]:
+    vocab = resolve_config(arch).vocab_size
+    rng = np.random.RandomState(7)
+    return [Request(rid=i, prompt=rng.randint(0, vocab, size=_PROMPT),
+                    max_new=_MAX_NEW) for i in range(_N_REQS)]
+
+
+def _fresh_engine(arch: str, n_slots: int) -> ServingEngine:
+    eng = ServingEngine.create(arch, _params(arch), (1, 1),
+                               n_slots=n_slots, max_seq=_MAX_SEQ)
+    for r in _requests(arch):
+        eng.submit(r)
+    return eng
+
+
+def _warm_engine(sess, eng: ServingEngine) -> None:
+    # 3 of max_new=6 tokens: every request is strictly mid-flight
+    for _ in range(3):
+        eng.step()
+
+
+def _outcome_engine(eng: ServingEngine) -> Dict[int, Tuple[int, ...]]:
+    live = eng.live_requests()
+    assert len(live) == _N_REQS, \
+        f"re-slot dropped sessions: {len(live)}/{_N_REQS} survive"
+    eng.run_until_drained(max_steps=500)
+    return {r.rid: tuple(int(t) for t in r.out) for r in live}
+
+
+@functools.lru_cache(maxsize=None)
+def _reference_serving(arch: str) -> Dict[int, Tuple[int, ...]]:
+    eng = _fresh_engine(arch, n_slots=2)
+    reqs = eng.live_requests()
+    eng.run_until_drained(max_steps=500)
+    return {r.rid: tuple(int(t) for t in r.out) for r in reqs}
+
+
+# --- RL third-party side ----------------------------------------------------
+
+def _fresh_rl() -> "rl.RLActorLearner":
+    return rl.RLActorLearner(n_actors=2, n_streams=8, dim=16, seed=5)
+
+
+def _check_rl_shrink(app2: Any, target: Any) -> None:
+    assert app2.n_actors == len(target.hosts), \
+        f"restored onto {app2.n_actors} actors, wanted {len(target.hosts)}"
+
+
+# --- spec assembly ----------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def get_spec(family: str) -> FamilySpec:
+    if family == THIRD_PARTY:
+        return FamilySpec(
+            family=family,
+            train=TrainDrive(
+                fresh=_fresh_rl,
+                advance=lambda a, n: a.collect_and_learn(n),
+                digest=lambda a: a.digest(),
+                step_of=lambda a: a.t),
+            elastic=ElasticDrive(
+                fresh=_fresh_rl,
+                warm=lambda sess, a: a.collect_and_learn(3),
+                outcome=lambda a: (a.n_actors,
+                                   a.collect_and_learn(3) or a.digest()),
+                reference=lambda: (3, _rl_reference_digest()),
+                reslot_kwargs=lambda: {"n_actors": 3}),
+            shrink=ShrinkDrive(
+                hosts=(0, 1, 2), dead=0, n_shards=None,
+                restore_kwargs=lambda tgt: {"n_actors": len(tgt.hosts)},
+                check=_check_rl_shrink))
+    arch = ARCHS[family]
+    return FamilySpec(
+        family=family,
+        train=TrainDrive(
+            fresh=lambda: _fresh_trainer(arch),
+            advance=_advance_trainer,
+            digest=_digest_trainer,
+            step_of=lambda t: t.checkpoint_step()),
+        elastic=ElasticDrive(
+            fresh=lambda: _fresh_engine(arch, n_slots=2),
+            warm=_warm_engine,
+            outcome=_outcome_engine,
+            reference=lambda: _reference_serving(arch),
+            reslot_kwargs=lambda: {"params": _params(arch), "n_slots": 1}),
+        shrink=ShrinkDrive(
+            hosts=(0, 1, 2), dead=0, n_shards=N_SHARDS,
+            prepare=lambda t: t.apply_reassignment(
+                _round_robin((0, 1, 2))),
+            check=_check_shrink_assignment))
+
+
+@functools.lru_cache(maxsize=None)
+def _rl_reference_digest() -> str:
+    app = _fresh_rl()
+    app.collect_and_learn(6)
+    return app.digest()

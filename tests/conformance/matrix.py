@@ -1,0 +1,48 @@
+"""Cell enumeration for the conformance matrix.
+
+A cell is ``family×mode×backend``. The fast subset — every family ×
+every failure mode on the localfs package (swap cells cross packages by
+definition) — runs in tier-1; the sharded backend axis and the second
+MoE family (top-k>1 routing) ride behind the ``slow`` marker.
+
+``expected_cells.json`` pins the fast subset's IDs; ``check_report.py``
+fails CI when a previously-green cell goes missing or skipped, and
+``test_matrix.test_expected_cells_manifest_in_sync`` keeps the pin from
+drifting out from under a family addition.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+FAMILIES = ("attention", "moe", "ssm", "rglru", "encdec", "thirdparty")
+SLOW_FAMILIES = ("moe-topk",)        # kimi-k2 class: top-k>1 routing
+MODES = ("kill", "reslot", "shrink", "commit", "swap")
+
+
+@dataclass(frozen=True)
+class Cell:
+    family: str
+    mode: str
+    backend: str
+
+    @property
+    def id(self) -> str:
+        return f"{self.family}×{self.mode}×{self.backend}"
+
+
+def _backend_for(mode: str, backend: str) -> str:
+    return "localfs↔sharded" if mode == "swap" else backend
+
+
+def fast_cells() -> List[Cell]:
+    return [Cell(f, m, _backend_for(m, "localfs"))
+            for f in FAMILIES for m in MODES]
+
+
+def slow_cells() -> List[Cell]:
+    cells = [Cell(f, m, "sharded")
+             for f in FAMILIES for m in MODES if m != "swap"]
+    cells += [Cell(f, m, _backend_for(m, "localfs"))
+              for f in SLOW_FAMILIES for m in MODES]
+    return cells

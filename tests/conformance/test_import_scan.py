@@ -1,0 +1,86 @@
+"""The agnosticism claim, enforced by AST scan rather than convention.
+
+Three tiers:
+  - matrix cells (driver, enumeration, tests, gate script): may import
+    ``repro.api`` and nothing else from ``repro`` — the torture
+    sequence itself must be expressible on the public surface;
+  - the app side (``families.py``): may additionally import the
+    *application* layer it is standing in for (trainer, serving engine,
+    configs, models) but NEVER ``repro.core`` — apps built on the
+    session API must not need the internals;
+  - the shipped examples: public API only, like any third party.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+import pytest
+
+PKG = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(os.path.dirname(PKG))
+
+API_ONLY = ("repro.api",)
+APP_SIDE = {
+    "families.py": ("repro.api", "repro.train.loop",
+                    "repro.serving.engine", "repro.configs",
+                    "repro.models"),
+}
+EXAMPLES = ("checkpointable_pipeline.py", "rl_actor_learner.py")
+
+
+def _repro_imports(path):
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            names |= {a.name for a in node.names
+                      if a.name == "repro" or a.name.startswith("repro.")}
+        elif isinstance(node, ast.ImportFrom) and node.level == 0 \
+                and node.module \
+                and (node.module == "repro"
+                     or node.module.startswith("repro.")):
+            names.add(node.module)
+    return sorted(names)
+
+
+def _allowed(name: str, allowlist) -> bool:
+    return any(name == a or name.startswith(a + ".") for a in allowlist)
+
+
+def _cell_modules():
+    return sorted(fn for fn in os.listdir(PKG)
+                  if fn.endswith(".py") and fn not in APP_SIDE)
+
+
+@pytest.mark.parametrize("fn", _cell_modules())
+def test_matrix_cells_import_only_the_public_api(fn):
+    bad = [n for n in _repro_imports(os.path.join(PKG, fn))
+           if not _allowed(n, API_ONLY)]
+    assert not bad, (
+        f"{fn} imports {bad}: matrix cells may import only repro.api — "
+        "if a scenario needs more, that is a hole in the public surface")
+
+
+@pytest.mark.parametrize("fn", sorted(APP_SIDE))
+def test_app_side_stays_out_of_core(fn):
+    names = _repro_imports(os.path.join(PKG, fn))
+    core = [n for n in names if n == "repro.core"
+            or n.startswith("repro.core.")]
+    assert not core, (
+        f"{fn} imports {core}: the app side must never reach repro.core "
+        "— apps on the session API do not need the internals")
+    bad = [n for n in names if not _allowed(n, APP_SIDE[fn])]
+    assert not bad, (
+        f"{fn} imports {bad}, outside its application-layer allowlist "
+        f"{sorted(APP_SIDE[fn])}")
+
+
+@pytest.mark.parametrize("fn", EXAMPLES)
+def test_examples_are_api_only(fn):
+    path = os.path.join(REPO, "examples", fn)
+    bad = [n for n in _repro_imports(path) if not _allowed(n, API_ONLY)]
+    assert not bad, (
+        f"examples/{fn} imports {bad}: the shipped examples are the "
+        "third-party proof and may import only repro.api")

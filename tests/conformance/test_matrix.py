@@ -1,0 +1,66 @@
+"""The conformance matrix: every config family × every failure mode,
+driven through ``repro.api`` alone.
+
+Each cell asserts bit-identical state/token continuation (digests over
+the complete semantic state, or per-request token streams for the
+elastic re-slot cells). Cells are independent — any one runs standalone
+via ``-k`` — but share per-family reference digests within a process,
+so the expensive uninterrupted runs are paid once.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from . import driver, families, matrix
+
+
+def _store(backend: str, tmp_path, tag: str = "s") -> str:
+    if backend == "localfs":
+        return f"localfs:{tmp_path}/{tag}"
+    return f"sharded:{tmp_path}/{tag}?hosts=3"
+
+
+def _run(cell: matrix.Cell, tmp_path) -> None:
+    spec = families.get_spec(cell.family)
+    if cell.mode == "swap":
+        driver.run_swap(spec, _store("localfs", tmp_path, "a"),
+                        _store("sharded", tmp_path, "b"))
+    elif cell.mode == "kill":
+        driver.run_kill(spec, _store(cell.backend, tmp_path))
+    elif cell.mode == "reslot":
+        driver.run_reslot(spec, _store(cell.backend, tmp_path))
+    elif cell.mode == "shrink":
+        driver.run_shrink(spec, _store(cell.backend, tmp_path))
+    elif cell.mode == "commit":
+        driver.run_commit(spec, _store(cell.backend, tmp_path))
+    else:  # pragma: no cover — the enumeration owns the mode list
+        raise AssertionError(f"unknown mode {cell.mode}")
+
+
+@pytest.mark.parametrize("cell", matrix.fast_cells(), ids=lambda c: c.id)
+def test_cell(cell, tmp_path):
+    _run(cell, tmp_path)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("cell", matrix.slow_cells(), ids=lambda c: c.id)
+def test_cell_full(cell, tmp_path):
+    _run(cell, tmp_path)
+
+
+def test_expected_cells_manifest_in_sync():
+    """The CI gate's pin and the live enumeration must agree — adding a
+    family without regenerating ``expected_cells.json`` fails HERE, not
+    silently in the artifact check."""
+    path = os.path.join(os.path.dirname(__file__), "expected_cells.json")
+    with open(path) as f:
+        pinned = json.load(f)
+    live = sorted(c.id for c in matrix.fast_cells())
+    assert pinned == live, (
+        "expected_cells.json is out of sync with matrix.fast_cells(); "
+        "regenerate it:\n  PYTHONPATH=src:tests python -c \"import json, "
+        "conformance.matrix as m; print(json.dumps(sorted(c.id for c in "
+        "m.fast_cells()), indent=2))\" > tests/conformance/expected_cells.json")

@@ -1,8 +1,13 @@
+import json
 import os
+import random
+import re
 import subprocess
 import sys
 import textwrap
+import time
 
+import numpy as np
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -29,3 +34,89 @@ def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600):
 @pytest.fixture
 def subproc():
     return run_with_devices
+
+
+# --- determinism: seeded global RNGs, guarded global JAX config --------------
+
+# Global config keys a test could flip and silently poison every test
+# that runs after it (x64 flips dtypes; disable_jit changes numerics
+# paths; matmul precision changes results on some backends).
+_JAX_CONFIG_KEYS = ("jax_enable_x64", "jax_disable_jit",
+                    "jax_default_matmul_precision",
+                    "jax_numpy_rank_promotion", "jax_debug_nans")
+
+
+def _jax_config_snapshot():
+    import jax
+    return {k: getattr(jax.config, k) for k in _JAX_CONFIG_KEYS}
+
+
+@pytest.fixture(autouse=True)
+def _seeded_rngs_and_config_guard(request):
+    """Every test starts from the same global-RNG state, and no test may
+    leak a global JAX config mutation into the next one.
+
+    Explicit PRNGKey / RandomState plumbing stays the norm in this repo;
+    the fixture covers the *implicit* channels — `random` / legacy
+    `np.random` callers — so conformance-matrix cells (and everything
+    else) are bitwise reproducible in any execution order."""
+    random.seed(0x5EED)
+    np.random.seed(0x5EED)
+    before = _jax_config_snapshot()
+    yield
+    after = _jax_config_snapshot()
+    changed = {k: (before[k], after[k]) for k in _JAX_CONFIG_KEYS
+               if before[k] != after[k]}
+    assert not changed, (
+        f"{request.node.nodeid} mutated global JAX config {changed} "
+        "without restoring it — use a try/finally or a fixture so later "
+        "tests keep deterministic numerics")
+
+
+# --- conformance-matrix cell report ------------------------------------------
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--conformance-report", default=None, metavar="PATH",
+        help="write per-cell conformance-matrix results (JSON) to PATH")
+
+
+_CONF_RE = re.compile(r"tests[/\\]conformance[/\\]test_matrix\.py::"
+                      r"[^\[]+\[(?P<cell>.+)\]$")
+_CONF_CELLS = {}
+
+
+def pytest_runtest_logreport(report):
+    m = _CONF_RE.search(report.nodeid)
+    if not m:
+        return
+    # pytest ascii-escapes non-ascii parametrize ids in nodeids
+    # ("×" -> "\xd7"); undo that so report keys match the canonical
+    # family×mode×backend cell IDs in expected_cells.json
+    cell = m.group("cell")
+    if "\\x" in cell or "\\u" in cell:
+        cell = cell.encode("ascii").decode("unicode_escape")
+    rec = _CONF_CELLS.setdefault(
+        cell, {"outcome": None, "duration_s": 0.0})
+    if report.when == "call":
+        rec["outcome"] = report.outcome
+        rec["duration_s"] = round(report.duration, 3)
+    elif rec["outcome"] is None and report.outcome != "passed":
+        # setup-time skip (markers) or setup/teardown error
+        rec["outcome"] = report.outcome
+        rec["duration_s"] = round(report.duration, 3)
+
+
+def pytest_sessionfinish(session):
+    path = session.config.getoption("--conformance-report", default=None)
+    if not path or not _CONF_CELLS:
+        return
+    outcomes = [r["outcome"] for r in _CONF_CELLS.values()]
+    payload = {
+        "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "cells": dict(sorted(_CONF_CELLS.items())),
+        "summary": {o: outcomes.count(o) for o in sorted(set(outcomes))},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")

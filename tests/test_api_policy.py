@@ -172,3 +172,143 @@ def test_third_party_backend_registers_without_core(tmp_path):
         assert resolve_backend("memdir:/x?depth=3") == ("memdir", "/x", 3)
     finally:
         BACKEND_SCHEMES.pop("memdir", None)
+
+
+# --- registry collision safety ----------------------------------------------
+
+def test_duplicate_backend_scheme_raises():
+    from repro.api import register_backend
+    from repro.api.registry import BACKEND_SCHEMES
+
+    @register_backend("collide")
+    def _first(path):
+        return ("first", path)
+
+    try:
+        # re-registering the same callable (module reimport) is a no-op
+        register_backend("collide")(_first)
+        with pytest.raises(PolicyError, match="already registered"):
+            @register_backend("collide")
+            def _second(path):
+                return ("second", path)
+        # the failed grab left the original in place
+        assert resolve_backend("collide:/x") == ("first", "/x")
+
+        @register_backend("collide", replace=True)
+        def _third(path):
+            return ("third", path)
+        assert resolve_backend("collide:/x") == ("third", "/x")
+    finally:
+        BACKEND_SCHEMES.pop("collide", None)
+
+
+def test_duplicate_app_kind_raises():
+    from repro.api import register_app_kind
+    from repro.api.registry import APP_KINDS
+
+    @register_app_kind("collide-kind")
+    def _b1(restore):
+        return "b1"
+
+    try:
+        register_app_kind("collide-kind")(_b1)   # idempotent
+        with pytest.raises(PolicyError, match="already registered"):
+            @register_app_kind("collide-kind")
+            def _b2(restore):
+                return "b2"
+        assert APP_KINDS["collide-kind"] is _b1
+
+        @register_app_kind("collide-kind", replace=True)
+        def _b3(restore):
+            return "b3"
+        assert APP_KINDS["collide-kind"] is _b3
+    finally:
+        APP_KINDS.pop("collide-kind", None)
+
+
+def test_builtin_kind_collision_detected_before_lazy_import():
+    # "train" belongs to repro.train.loop whether or not that module has
+    # loaded yet — grabbing a built-in kind must be loud either way
+    from repro.api import register_app_kind
+    with pytest.raises(PolicyError, match="'train'.*already registered"):
+        @register_app_kind("train")
+        def _usurper(restore):
+            return None
+
+
+def test_replaced_builtin_survives_home_module_import():
+    from repro.api import register_app_kind
+    from repro.api.registry import APP_KINDS
+    try:
+        @register_app_kind("serving", replace=True)
+        def _custom(restore):
+            return "custom"
+        import repro.serving.engine  # noqa: F401
+        # the built-in module loading later must not clobber the
+        # deliberate override
+        assert APP_KINDS["serving"] is _custom
+    finally:
+        from repro.serving.engine import _restore_engine
+        APP_KINDS["serving"] = _restore_engine
+
+
+# --- policy edge combos ------------------------------------------------------
+
+def test_chain_with_keep_last_one_keeps_base_closure(tmp_path):
+    """keep_last=1 under chaining must keep the survivor's base too —
+    retention can never leave the newest checkpoint unrestorable."""
+    from repro.core import OpLog, UpperHalf
+    p = Policy(chain=3, keep_last=1, async_save=False)
+    mgr = p.build_manager(LocalFSBackend(str(tmp_path)))
+    try:
+        up = UpperHalf()
+        up.register("w", "params", np.arange(64, dtype=np.float32))
+        log = OpLog()
+        for s in range(1, 6):
+            up.update("w", np.arange(64, dtype=np.float32) + s)
+            mgr.save(s, up, log, block=True)
+        # bases at 1 and 4; keep_last=1 keeps 5 plus its base 4, only
+        steps = mgr.backend.list_steps()
+        assert steps == [4, 5]
+        assert mgr.backend.get_manifest(5).get("base_step") == 4
+        got = mgr.restore(5).entries["w"]
+        np.testing.assert_array_equal(
+            next(iter(got.values())), np.arange(64, dtype=np.float32) + 5)
+    finally:
+        mgr.close()
+
+
+def test_interval_one_snapshots_every_step(tmp_path):
+    """interval=1 is the densest legal cadence: every step boundary
+    commits (step 0 never does — there is nothing to restore to)."""
+    from repro.core import OpLog, UpperHalf
+
+    class Counter:
+        def __init__(self):
+            self.upper = UpperHalf()
+            self.upper.register("n", "step", np.int64(0))
+            self.log = OpLog()
+
+        def checkpoint_state(self):
+            return self.upper
+
+        def checkpoint_step(self):
+            return int(self.upper.get("n"))
+
+        def job_meta(self):
+            return {"kind": "counter-policy-test"}
+
+        def bind(self, restore):
+            raise NotImplementedError
+
+    sess = CheckpointSession(f"localfs:{tmp_path}",
+                             Policy(interval=1, async_save=False))
+    try:
+        app = sess.attach(Counter())
+        assert sess.maybe_snapshot() is None   # step 0: nothing yet
+        for n in range(1, 4):
+            app.upper.update("n", np.int64(n))
+            sess.maybe_snapshot()
+        assert sess.backend.list_steps() == [1, 2, 3]
+    finally:
+        sess.close()
