@@ -1,0 +1,238 @@
+"""Roofline gate for the snapshot codec hot path: capture-stall and
+restore-decode throughput per leaf size, measured against the machine's
+memory ceiling — so a speed regression in the hottest C/R path fails CI
+like a correctness bug (ROADMAP item 2; the dace ``RooflineModel`` /
+reframe Advisor workflow from SNIPPETS.md applied to our own codec).
+
+Two ceilings, because the two paths bound differently:
+
+``warm``  ``np.copyto`` into a preallocated buffer — the streaming-read
+          ceiling the *capture* fingerprint pass is held to (capture
+          reads the leaf once; its destination state is tiny).
+``cold``  ``ndarray.copy()`` into freshly allocated pages — the ceiling
+          *restore decode* is held to: restore materializes new buffers
+          every time, so first-touch page faults are part of its roof,
+          not noise to be excused.
+
+On TPU the ceiling is ``HBM_BW`` from ``repro.launch.hlo_analysis`` and
+the measured path is the fused single-pass capture kernel
+(``ops.fused_dirty_chunk_capture``); on host the measured paths are the
+caller-thread fingerprint pass and the sparse/dense chain decode.
+Compression is off for the decode rows: the gate holds the memory-bound
+codec, not zlib's entropy coding (which runs on the background encode
+thread). Encode throughput is reported as an ungated reference row.
+
+``--check`` fails when any gated row's fraction-of-ceiling drops below
+its pinned floor (``PINNED``). Re-pin by running ``--json`` on the
+target machine class and setting each floor to ~half the observed
+fraction — headroom for shared-runner noise, tight enough that a 2x
+regression (an extra pass over the data) cannot hide.
+
+CLI:
+  PYTHONPATH=src:. python benchmarks/ckpt_roofline.py \
+      [--smoke] [--check] [--json BENCH_roofline.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import delta as deltamod
+from repro.kernels.ckpt_codec.ref import FP_CHUNK_BYTES, fingerprint_host
+
+# gated fraction-of-ceiling floors, pinned from measured runs (fractions
+# observed on the dev box: capture 1.0-1.5, sparse decode ~0.95, dense
+# xor decode ~0.5); each floor is ~half the observed value
+PINNED: Dict[str, float] = {
+    "capture/fingerprint": 0.50,
+    "restore/sparse_decode": 0.45,
+    "restore/dense_decode": 0.25,
+    "capture/fused_kernel": 0.25,   # TPU only
+}
+
+SIZES = {
+    "full": dict(leaf_mb=256, chunk_bytes=FP_CHUNK_BYTES, dirty_every=20),
+    "smoke": dict(leaf_mb=32, chunk_bytes=64 * 1024, dirty_every=20),
+}
+
+_REPS = 5
+
+
+def _median_s(f: Callable[[], object], reps: int = _REPS) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        f()
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def _ceilings(nbytes: int) -> Dict[str, float]:
+    """Measured memory ceilings (GB/s of payload), see module docstring."""
+    src = np.random.RandomState(0).randint(0, 256, nbytes, dtype=np.uint8)
+    dst = np.empty_like(src)
+    warm = nbytes / _median_s(lambda: np.copyto(dst, src)) / 1e9
+    cold = nbytes / _median_s(lambda: src.copy()) / 1e9
+    return {"warm": warm, "cold": cold}
+
+
+def _on_tpu() -> bool:
+    try:
+        import jax
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def _sparse_meta(src: np.ndarray, chunk_bytes: int, dirty_every: int):
+    """Build a ~1/dirty_every-dirty sparse (format-3) link over src."""
+    n = src.size
+    nch = -(-n // chunk_bytes)
+    idx = np.arange(0, nch, dirty_every, dtype=np.int64)
+    cur = src.copy()
+    for i in idx:
+        off = int(i) * chunk_bytes
+        cur[off:off + 64] ^= 0xFF
+    blobs: Dict[str, bytes] = {}
+    pad = (-n) % chunk_bytes
+    padded = np.concatenate([cur, np.zeros(pad, np.uint8)]) if pad else cur
+    compact = padded.reshape(nch, chunk_bytes)[idx].copy()
+    meta = deltamod.encode_leaf_sparse(
+        (n,), np.uint8, chunk_bytes, nch, idx, compact, src.copy(),
+        lambda k, d: blobs.setdefault(k, d), lambda k: k in blobs,
+        compress=False)
+    return meta, blobs, cur, idx
+
+
+def _dense_meta(src: np.ndarray, cur: np.ndarray):
+    """Dense format-2 xor link between the same two states."""
+    blobs: Dict[str, bytes] = {}
+    meta = deltamod.encode_leaf(
+        cur, lambda k, d: blobs.setdefault(k, d), lambda k: k in blobs,
+        prev=src, compress=False)
+    return meta, blobs
+
+
+def measure(cfg: dict) -> List[dict]:
+    """-> rows: {name, gbps, ceiling_gbps, fraction, pinned|None}."""
+    nbytes = cfg["leaf_mb"] << 20
+    cb = cfg["chunk_bytes"]
+    ceil = _ceilings(nbytes)
+    src = np.random.RandomState(1).randint(0, 256, nbytes, dtype=np.uint8)
+    rows: List[dict] = []
+
+    def row(name: str, seconds: float, ceiling: float,
+            payload: Optional[int] = None, extra: str = "") -> None:
+        gbps = (payload if payload is not None else nbytes) / seconds / 1e9
+        rows.append({
+            "name": f"ckpt_roofline/{name}/{cfg['leaf_mb']}MiB",
+            "gbps": round(gbps, 3),
+            "ceiling_gbps": round(ceiling, 3),
+            "fraction": round(gbps / ceiling, 4),
+            "pinned": PINNED.get(name),
+            "derived": extra,
+        })
+
+    # --- capture stall: the dirty-detection read pass (caller thread) ---
+    t = _median_s(lambda: fingerprint_host(src, cb))
+    row("capture/fingerprint", t, ceil["warm"],
+        extra=f"chunk_bytes={cb}")
+
+    if _on_tpu():  # the fused single-pass kernel against HBM peak
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels.ckpt_codec import ops
+        from repro.launch.hlo_analysis import HBM_BW
+        xd = jnp.asarray(src.view(np.int32))
+        prev_fp = ops.chunk_fingerprints(xd, cb)
+        jax.block_until_ready(prev_fp)
+        t = _median_s(lambda: ops.fused_dirty_chunk_capture(
+            xd, prev_fp, cb, capacity_hint=8))
+        row("capture/fused_kernel", t, HBM_BW / 1e9,
+            extra="1_launch_1_d2h")
+
+    # --- restore decode: sparse dirty-chunk link, then dense xor link ---
+    meta_s, blobs_s, cur, idx = _sparse_meta(src, cb, cfg["dirty_every"])
+    t = _median_s(lambda: deltamod.decode_leaf(
+        meta_s, blobs_s.__getitem__, prev=src))
+    row("restore/sparse_decode", t, ceil["cold"],
+        extra=f"dirty_chunks={idx.size}")
+    meta_d, blobs_d = _dense_meta(src, cur)
+    t = _median_s(lambda: deltamod.decode_leaf(
+        meta_d, blobs_d.__getitem__, prev=src))
+    row("restore/dense_decode", t, ceil["cold"])
+
+    # --- encode (background thread; ungated reference: hash-bound) ---
+    nch = -(-nbytes // cb)
+    pad = (-nbytes) % cb
+    padded = np.concatenate([cur, np.zeros(pad, np.uint8)]) if pad else cur
+    compact = padded.reshape(nch, cb)[idx].copy()
+    mirror = src.copy()
+    dirty_bytes = idx.size * cb
+    t = _median_s(lambda: deltamod.encode_leaf_sparse(
+        (nbytes,), np.uint8, cb, nch, idx, compact, mirror,
+        lambda k, d: None, lambda k: False, compress=False,
+        patch_prev=False))
+    row("encode/sparse_xor", t, ceil["warm"], payload=dirty_bytes,
+        extra=f"dirty_bytes={dirty_bytes}")
+
+    # verification ride-along: the links we timed decode to the truth
+    np.testing.assert_array_equal(
+        deltamod.decode_leaf(meta_s, blobs_s.__getitem__, prev=src), cur)
+    np.testing.assert_array_equal(
+        deltamod.decode_leaf(meta_d, blobs_d.__getitem__, prev=src), cur)
+    return rows
+
+
+def run(smoke: bool = False) -> list:
+    """benchmarks.run-compatible rows (name, value_us_or_ratio, derived)."""
+    out = []
+    for r in measure(SIZES["smoke" if smoke else "full"]):
+        out.append((r["name"], r["fraction"] * 1e6,
+                    f"gbps={r['gbps']}_ceiling={r['ceiling_gbps']}"
+                    f"_pinned={r['pinned']}"))
+    return out
+
+
+def check(rows: List[dict]) -> None:
+    failures = []
+    for r in rows:
+        base = r["name"].split("ckpt_roofline/")[1].rsplit("/", 1)[0]
+        pinned = PINNED.get(base)
+        if pinned is not None and r["fraction"] < pinned:
+            failures.append(
+                f"{r['name']}: {r['gbps']} GB/s is "
+                f"{r['fraction']:.2f} of the {r['ceiling_gbps']} GB/s "
+                f"ceiling (< pinned {pinned})")
+    if failures:
+        raise SystemExit("roofline gate FAILED: " + "; ".join(failures))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes (CI regression gate)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero when a gated path drops below its "
+                         "pinned fraction of the machine ceiling")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (CI artifact)")
+    args = ap.parse_args()
+    rows = measure(SIZES["smoke" if args.smoke else "full"])
+    print("name,gbps,ceiling_gbps,fraction,pinned")
+    for r in rows:
+        print(f"{r['name']},{r['gbps']},{r['ceiling_gbps']},"
+              f"{r['fraction']},{r['pinned']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+    if args.check:
+        check(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,10 @@
   mttr            — detection -> serving-again per failure policy
                     (hot-spare / shrink / restart; hot-spare < restart
                     gate)
+  ckpt_roofline   — snapshot codec vs machine memory ceiling: capture
+                    fingerprint + restore decode GB/s as a fraction of
+                    measured memcpy (or HBM_BW on TPU); pinned-fraction
+                    gate
   roofline_table  — §Roofline: aggregated dry-run terms (reads
                     benchmarks/results/dryrun; run repro.launch.dryrun
                     first — missing cells simply produce no rows)
@@ -23,8 +27,9 @@ import sys
 
 def main() -> None:
     from benchmarks import (async_snapshot_bench, capture_stall,
-                            ckpt_codec_bench, mttr, oplog_bench,
-                            overhead, restart_speed, roofline_table)
+                            ckpt_codec_bench, ckpt_roofline, mttr,
+                            oplog_bench, overhead, restart_speed,
+                            roofline_table)
     suites = {
         "restart_speed": restart_speed.run,
         "overhead": overhead.run,
@@ -32,6 +37,7 @@ def main() -> None:
         "ckpt_codec": ckpt_codec_bench.run,
         "async_snapshot": async_snapshot_bench.run,
         "capture_stall": capture_stall.run,
+        "ckpt_roofline": ckpt_roofline.run,
         "mttr": mttr.run,
         "roofline": roofline_table.run,
     }

@@ -39,10 +39,17 @@ retained manifest, so a kept checkpoint is always restorable.
 Sparse (dirty-chunk) capture: with chaining on, capture no longer pays a
 full device->host copy of every leaf. Each leaf's previous-snapshot
 fingerprints (per-chunk hashes, device-resident on TPU via the
-kernels/ckpt_codec Pallas fingerprint kernel, host segment-sums
-otherwise) are compared against the current value; only the chunks whose
-fingerprint changed are gather-compacted and transferred — one
-device->host hop per leaf, sized by what changed. Immutable jax leaves
+kernels/ckpt_codec Pallas kernels, host segment-sums otherwise) are
+compared against the current value; only the chunks whose fingerprint
+changed are compacted and transferred. On TPU this is ONE fused Pallas
+launch per leaf (``ops.fused_dirty_chunk_capture``: fingerprint,
+in-kernel compare against the device-resident baseline, and
+running-count compaction into a bounded buffer, all in a single HBM
+read of the leaf) followed by ONE blocking device->host hop — vs the
+old two-launch path (fingerprint launch, mask sync, gather launch,
+payload sync), which remains the fallback when a step dirties more
+chunks than the compaction buffer holds. The buffer is sized
+adaptively from each leaf's previous dirty count. Immutable jax leaves
 that are literally the same Array object as last capture (common for
 frozen params and serving weights) are skipped without reading a byte.
 The encode thread then XORs only those dirty chunks against the pinned
@@ -116,6 +123,9 @@ class _LeafFP:
     nbytes: int
     fp: Any
     wref: Optional[weakref.ref] = None
+    # chunks dirty at the last capture: sizes the fused kernel's
+    # compaction buffer next time (change rates are stable step-to-step)
+    last_dirty: Optional[int] = None
 
 
 @dataclass
@@ -259,11 +269,11 @@ class _StagingSlot:
                     if sp is not None:
                         taken[path] = sp
                         continue
-                host = jax.device_get(v)
-                if accel and host is not v and not isinstance(v, np.ndarray):
-                    a = np.asarray(host)  # already a private copy
-                else:
-                    a = np.asarray(host)
+                a = np.asarray(jax.device_get(v))
+                if not (accel and a is not v
+                        and not isinstance(v, np.ndarray)):
+                    # not already a private copy: stage into this slot's
+                    # preallocated pool
                     buf = pool.get(path)
                     if buf is None or buf.shape != a.shape \
                             or buf.dtype != a.dtype:
@@ -310,7 +320,10 @@ class _StagingSlot:
         if fpe.impl == "tpu" and _tpu_attached() \
                 and isinstance(v, jax.Array) and len(v.devices()) == 1:
             from repro.kernels.ckpt_codec import ops
-            fp_new, idx, compact = ops.dirty_chunk_capture(v, fpe.fp, cb)
+            # fused single pass: 1 kernel launch + 1 blocking D2H (the
+            # two-launch gather path is its internal overflow fallback)
+            fp_new, idx, compact = ops.fused_dirty_chunk_capture(
+                v, fpe.fp, cb, capacity_hint=fpe.last_dirty)
             wref = weakref.ref(v)
         elif fpe.impl == "host":
             buf = _leaf_bytes(v)
@@ -318,18 +331,27 @@ class _StagingSlot:
             idx = np.nonzero(np.any(fp_new != fpe.fp, axis=1))[0]
             compact = None
             if idx.size:
+                # one sliced gather for every full chunk (idx is sorted,
+                # so the split point is a searchsorted); only a partial
+                # tail chunk — at most one, the last index — is copied
+                # scalar and zero-padded
                 compact = np.empty((idx.size, cb), np.uint8)
-                for j, i in enumerate(idx):
-                    off = int(i) * cb
-                    ln = min(cb, v.nbytes - off)
-                    compact[j, :ln] = buf[off:off + ln]
+                n_full = buf.size // cb
+                k_full = int(np.searchsorted(idx, n_full))
+                np.take(buf[:n_full * cb].reshape(n_full, cb),
+                        idx[:k_full], axis=0, out=compact[:k_full])
+                for j in range(k_full, idx.size):
+                    off = int(idx[j]) * cb
+                    ln = buf.size - off
+                    compact[j, :ln] = buf[off:]
                     compact[j, ln:] = 0
             wref = weakref.ref(v) if isinstance(v, jax.Array) else None
         else:
             return None  # baseline impl doesn't match this leaf anymore
         ctx.fp[(name, path)] = _LeafFP(
             impl=fpe.impl, chunk_bytes=cb, shape=tuple(v.shape),
-            dtype=str(v.dtype), nbytes=v.nbytes, fp=fp_new, wref=wref)
+            dtype=str(v.dtype), nbytes=v.nbytes, fp=fp_new, wref=wref,
+            last_dirty=int(idx.size))
         st["sparse_leaves"] += 1
         st["dirty_chunks"] += int(idx.size)
         st["clean_chunks"] += n_chunks - int(idx.size)

@@ -279,9 +279,36 @@ def encode_leaf_sparse(
     assert prev_b.size == total, (prev_b.size, total)
     dirty: List[List[Any]] = []
     written = encoded = 0
-    for j, idx in enumerate(np.asarray(dirty_idx, np.int64)):
-        off = int(idx) * chunk_bytes
-        ln = min(chunk_bytes, total - off)
+    idxs = np.asarray(dirty_idx, np.int64)
+    if idxs.size and np.any(np.diff(idxs) < 0):  # capture emits sorted;
+        order = np.argsort(idxs)                 # guard other callers
+        idxs = idxs[order]
+        dirty_bytes = dirty_bytes[order]
+    # one vectorized XOR + fancy-index patch over every full dirty chunk
+    # (the hot path: k SIMD row ops instead of a k-iteration Python
+    # loop); only a partial tail chunk — at most one, and only when the
+    # leaf isn't a chunk multiple — takes the scalar path below. idxs
+    # arrive in ascending chunk order from capture, so the tail (the
+    # largest index) is last and the manifest order is unchanged.
+    n_full = total // chunk_bytes
+    k_full = int(np.searchsorted(idxs, n_full))
+    if k_full:
+        grid = prev_b[:n_full * chunk_bytes].reshape(n_full, chunk_bytes)
+        fi = idxs[:k_full]
+        cur_rows = dirty_bytes[:k_full]
+        deltas = np.bitwise_xor(cur_rows, grid[fi])
+        changed = deltas.any(axis=1)
+        if patch_prev:
+            grid[fi] = cur_rows  # in-place mirror advance, one scatter
+        encoded += k_full * chunk_bytes
+        for j in np.nonzero(changed)[0]:
+            h, enc, w = _store_chunk(deltas[j].tobytes(), put_blob,
+                                     has_blob, compress)
+            dirty.append([int(idxs[j]), h, enc])
+            written += w
+    for j in range(k_full, idxs.size):  # partial tail chunk
+        off = int(idxs[j]) * chunk_bytes
+        ln = total - off
         cur = dirty_bytes[j, :ln]
         pv = prev_b[off:off + ln]
         delta = np.bitwise_xor(cur, pv)
@@ -292,7 +319,7 @@ def encode_leaf_sparse(
             continue  # conservative dirty mark; nothing actually changed
         h, enc, w = _store_chunk(delta.tobytes(), put_blob, has_blob,
                                  compress)
-        dirty.append([int(idx), h, enc])
+        dirty.append([int(idxs[j]), h, enc])
         written += w
     return {
         "shape": list(shape),

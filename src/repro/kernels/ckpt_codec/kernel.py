@@ -119,6 +119,93 @@ def fingerprint_blocks(xb: jax.Array, rows_per_chunk: int, *,
     )(xb)
 
 
+def _fused_capture_kernel(x_ref, pfp_ref, fp_ref, cnt_ref, idx_ref, out_ref):
+    """One chunk per grid step: hash, compare against the previous
+    snapshot's fingerprint, and — when dirty — append the chunk to the
+    compaction buffer at the running dirty count. TPU grids execute
+    sequentially, so ``cnt_ref`` (a 1x1 accumulator revisited by every
+    step) is a prefix sum over the dirty mask: each chunk lands at its
+    final compacted position in the same pass that detected it."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        cnt_ref[0, 0] = 0
+
+    x = x_ref[...]                                   # [R, BLOCK] i32
+    r, c = x.shape
+    row = jax.lax.broadcasted_iota(jnp.int32, (r, c), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (r, c), 1)
+    pos = row * c + col
+    h1 = jnp.sum(x * (2 * pos + 1))
+    h2 = jnp.sum((x ^ jnp.int32(_FP_XOR_C)) * (2 * pos + jnp.int32(_FP_MUL_C)))
+    fp_ref[0, 0] = h1
+    fp_ref[0, 1] = h2
+    dirty = jnp.logical_or(h1 != pfp_ref[0, 0], h2 != pfp_ref[0, 1])
+    k = cnt_ref[0, 0]
+    capacity = idx_ref.shape[0]
+
+    @pl.when(jnp.logical_and(dirty, k < capacity))
+    def _():
+        idx_ref[k, 0] = i
+        out_ref[pl.ds(k * r, r), :] = x
+
+    @pl.when(dirty)
+    def _():
+        # counted past capacity on purpose: the host reads the final
+        # count to detect overflow (fall back to the two-launch path)
+        cnt_ref[0, 0] = k + 1
+
+
+def fused_capture_blocks(xb: jax.Array, prev_fp: jax.Array,
+                         rows_per_chunk: int, capacity: int, *,
+                         interpret: bool = False):
+    """Single-pass capture: xb i32 [n_chunks * rows_per_chunk, BLOCK],
+    prev_fp i32 [n_chunks, 2] (device-resident) ->
+
+      (fp i32 [n_chunks, 2],          this snapshot's fingerprints
+       count i32 [1, 1],              total dirty chunks (may exceed
+                                      ``capacity`` — overflow signal)
+       idx i32 [capacity, 1],         chunk index per compacted slot
+       compact i32 [capacity * rows_per_chunk, BLOCK])
+
+    The leaf is read from HBM exactly once; fingerprint compare and
+    dirty compaction happen in the same VMEM pass (vs the two-launch
+    path: one fingerprint read + a host round-trip + a gather re-read).
+    ``capacity * chunk_bytes`` stays VMEM-resident for the whole grid,
+    so ops.py bounds it (~8 MB); only ``count`` rows are meaningful.
+    """
+    nb = xb.shape[0]
+    assert nb % rows_per_chunk == 0, (nb, rows_per_chunk)
+    n_chunks = nb // rows_per_chunk
+    assert prev_fp.shape == (n_chunks, 2), (prev_fp.shape, n_chunks)
+    assert capacity >= 1
+    grid = (n_chunks,)
+    return pl.pallas_call(
+        _fused_capture_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_chunk, BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((capacity, 1), lambda i: (0, 0)),
+            pl.BlockSpec((capacity * rows_per_chunk, BLOCK),
+                         lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_chunks, 2), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((capacity, 1), jnp.int32),
+            jax.ShapeDtypeStruct((capacity * rows_per_chunk, BLOCK),
+                                 jnp.int32),
+        ],
+        interpret=interpret,
+    )(xb, prev_fp)
+
+
 def _dequant_kernel(q_ref, s_ref, x_ref):
     q = q_ref[...].astype(jnp.float32)
     x_ref[...] = q * s_ref[...][:, None]

@@ -81,9 +81,11 @@ def delta_encode(x: np.ndarray, prev: np.ndarray, *,
 
 
 def delta_decode(delta: np.ndarray, prev: np.ndarray, dtype,
-                 shape) -> np.ndarray:
-    """XOR is its own inverse; reinterpret the result."""
-    raw = delta_encode(delta, prev)
+                 shape, *, interpret: bool = None) -> np.ndarray:
+    """XOR is its own inverse; reinterpret the result. ``interpret``
+    is forwarded to the encode kernel (a CPU caller forcing
+    ``interpret=True`` must not silently get the probed default)."""
+    raw = delta_encode(delta, prev, interpret=interpret)
     return np.frombuffer(raw.tobytes(), dtype=dtype).reshape(shape)
 
 
@@ -145,7 +147,11 @@ def _gather_chunks(x: jax.Array, idx: jax.Array, *, chunk_bytes: int):
 def dirty_chunk_capture(x, prev_fp, chunk_bytes: int = FP_CHUNK_BYTES, *,
                         interpret: bool = None
                         ) -> Tuple[jax.Array, np.ndarray, Optional[np.ndarray]]:
-    """Device-side incremental capture of one leaf.
+    """Device-side incremental capture of one leaf — the two-launch
+    path (fingerprint launch, mask sync, gather launch, payload sync).
+    Kept as the explicit fallback for :func:`fused_dirty_chunk_capture`
+    (compaction-buffer overflow) and for callers that cannot bound the
+    dirty count up front; the pipeline's default is the fused kernel.
 
     Fingerprints ``x`` on device, compares against the previous
     snapshot's device-resident fingerprints, gather-compacts the dirty
@@ -169,6 +175,103 @@ def dirty_chunk_capture(x, prev_fp, chunk_bytes: int = FP_CHUNK_BYTES, *,
                              chunk_bytes=chunk_bytes)
     host = np.asarray(jax.device_get(compact))[:idx.size]
     return fp, idx, host.view(np.uint8).reshape(idx.size, chunk_bytes)
+
+
+# ---------------------------------------------------------------------------
+# fused single-pass capture (fingerprint + compare + compact, one launch)
+# ---------------------------------------------------------------------------
+
+# the compaction buffer stays VMEM-resident for the whole grid (constant
+# index map), so its size is bounded; 8 MB leaves room for the input
+# chunk tile + fingerprints inside a 16 MB VMEM
+_FUSED_VMEM_BUDGET = 8 << 20
+# capacity floor: below this the pow-of-two bucketing would retrace the
+# jit wrapper for every tiny dirty-count fluctuation
+_FUSED_MIN_CAPACITY = 8
+
+
+def fused_capacity(n_chunks: int, chunk_bytes: int,
+                   hint: Optional[int] = None) -> int:
+    """Compaction-buffer capacity (in chunks) for one fused launch.
+
+    2x the caller's hint (the leaf's dirty count last snapshot — change
+    rates are stable step to step), clamped to the leaf and to the VMEM
+    budget, then rounded up to a power of two so jit retraces O(log)
+    capacity variants instead of one per dirty count."""
+    cap = max(_FUSED_MIN_CAPACITY,
+              2 * (hint if hint is not None else _FUSED_MIN_CAPACITY))
+    cap = min(cap, n_chunks, max(1, _FUSED_VMEM_BUDGET // chunk_bytes))
+    return 1 << (cap - 1).bit_length()
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk_bytes", "capacity", "interpret"))
+def _fused_capture_impl(x: jax.Array, prev_fp: jax.Array, *,
+                        chunk_bytes: int, capacity: int,
+                        interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    xi = _device_i32_chunks(x, chunk_bytes)
+    rows = chunk_bytes // (4 * BLOCK)
+    return K.fused_capture_blocks(xi.reshape(-1, BLOCK), prev_fp, rows,
+                                  capacity, interpret=interpret)
+
+
+def fused_dirty_chunk_capture(
+        x, prev_fp, chunk_bytes: int = FP_CHUNK_BYTES, *,
+        capacity_hint: Optional[int] = None, interpret: bool = None
+        ) -> Tuple[jax.Array, np.ndarray, Optional[np.ndarray]]:
+    """Single-pass incremental capture of one leaf: exactly ONE kernel
+    launch and ONE blocking device->host transfer.
+
+    The fused kernel reads the leaf once, computes the 2-lane chunk
+    fingerprints, compares them in-kernel against the device-resident
+    previous fingerprints, and prefix-sum-compacts the dirty chunks into
+    a bounded buffer; ``(count, idx, compact)`` come back in one
+    ``device_get``. Returns the same ``(new_fp [device], dirty_idx
+    [host i64], dirty_bytes [host u8 [k, chunk_bytes] or None])``
+    contract as :func:`dirty_chunk_capture`, which remains the explicit
+    fallback: when more than ``capacity`` chunks are dirty (the kernel
+    keeps counting past the buffer so the host can tell), the gather
+    path finishes the job, reusing the fingerprints already computed.
+
+    ``capacity_hint`` sizes the compaction buffer (chunks dirty last
+    snapshot); see :func:`fused_capacity` for the clamping policy.
+    """
+    assert chunk_bytes % (4 * BLOCK) == 0, chunk_bytes
+    xd = jnp.asarray(x)
+    if isinstance(prev_fp, np.ndarray):  # ref-twin callers hold u32
+        prev_fp = prev_fp.view(np.int32)
+    n_chunks = -(-xd.nbytes // chunk_bytes)
+    capacity = fused_capacity(n_chunks, chunk_bytes, capacity_hint)
+    fp, cnt, idx, compact = _fused_capture_impl(
+        xd, prev_fp, chunk_bytes=chunk_bytes, capacity=capacity,
+        interpret=interpret)
+    # the one blocking hop: count + indices + compacted payload together
+    cnt_h, idx_h, compact_h = jax.device_get((cnt, idx, compact))
+    k = int(cnt_h[0, 0])
+    if k == 0:
+        return fp, np.empty(0, np.int64), None
+    if k > capacity:
+        # overflow: the change rate outran the buffer. Finish via the
+        # two-launch gather fallback, reusing the fingerprints (costs
+        # the old path's extra sync — but only on the rare step whose
+        # dirty count more than doubled; the caller's next hint is k)
+        mask = np.asarray(jax.device_get(_dirty_mask(fp, prev_fp)))
+        full_idx = np.nonzero(mask)[0]
+        padded = 1 << (full_idx.size - 1).bit_length()
+        idxp = np.full(padded, full_idx[-1], np.int32)
+        idxp[:full_idx.size] = full_idx
+        gathered = _gather_chunks(xd, jnp.asarray(idxp),
+                                  chunk_bytes=chunk_bytes)
+        host = np.asarray(jax.device_get(gathered))[:full_idx.size]
+        return (fp, full_idx.astype(np.int64),
+                host.view(np.uint8).reshape(full_idx.size, chunk_bytes))
+    rows = chunk_bytes // (4 * BLOCK)
+    dirty_idx = idx_h[:k, 0].astype(np.int64)
+    dirty_bytes = np.ascontiguousarray(compact_h[:k * rows]) \
+        .view(np.uint8).reshape(k, chunk_bytes)
+    return fp, dirty_idx, dirty_bytes
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

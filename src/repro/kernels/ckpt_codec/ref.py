@@ -7,7 +7,7 @@ kernel is validated against.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -94,6 +94,33 @@ def fingerprint_ref(buf, chunk_bytes: int = FP_CHUNK_BYTES) -> np.ndarray:
     h1 = (x * m1).sum(axis=1) & 0xFFFFFFFF
     h2 = ((x ^ np.uint64(_FP_XOR_C)) * m2).sum(axis=1) & 0xFFFFFFFF
     return np.stack([h1, h2], axis=1).astype(np.uint32)
+
+
+def fused_capture_ref(buf, prev_fp, chunk_bytes: int = FP_CHUNK_BYTES,
+                      capacity: Optional[int] = None
+                      ) -> Tuple[np.ndarray, int, np.ndarray, np.ndarray]:
+    """Bit-identical host twin of the fused single-pass capture kernel
+    (``kernel.fused_capture_blocks`` / ``ops.fused_dirty_chunk_capture``).
+
+    Returns ``(fp u32 [n_chunks, 2], count, dirty_idx i64 [k],
+    compact u8 [k, chunk_bytes])`` where ``count`` is the TOTAL dirty
+    count (it may exceed ``capacity``, mirroring the kernel's overflow
+    signal) and ``dirty_idx``/``compact`` hold the first
+    ``min(count, capacity)`` dirty chunks in chunk order — exactly the
+    rows the kernel's running-count compaction emits. The tail chunk is
+    zero-padded to ``chunk_bytes``, matching the kernel's padded read.
+    """
+    fp = fingerprint_ref(buf, chunk_bytes)
+    pf = np.ascontiguousarray(prev_fp).view(np.uint32).reshape(fp.shape)
+    idx = np.nonzero(np.any(fp != pf, axis=1))[0]
+    count = int(idx.size)
+    kept = idx if capacity is None else idx[:capacity]
+    b = _as_bytes(buf)
+    pad = (-b.size) % chunk_bytes
+    if pad:
+        b = np.concatenate([b, np.zeros(pad, np.uint8)])
+    compact = b.reshape(-1, chunk_bytes)[kept]
+    return fp, count, kept.astype(np.int64), compact
 
 
 def fingerprint_host(buf, chunk_bytes: int = FP_CHUNK_BYTES,

@@ -1,0 +1,283 @@
+"""Fused single-pass capture kernel: three-way equivalence against the
+ref.py host twin AND the old two-launch path (fingerprints, dirty
+indices, compacted bytes — all bit-identical), launch/transfer
+accounting (exactly 1 kernel launch + 1 blocking D2H per eligible
+leaf), overflow fallback, and the satellite fixes that ride along."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ckpt_codec import kernel as K
+from repro.kernels.ckpt_codec import ops
+from repro.kernels.ckpt_codec.ref import (fingerprint_ref,
+                                          fused_capture_ref)
+
+CB = 1024  # 4 * BLOCK: one i32 lane row per chunk — the minimum legal
+
+
+def _dirty_some(x: np.ndarray, chunk_bytes: int, which) -> np.ndarray:
+    y = x.copy()
+    b = y.view(np.uint8)
+    for i in which:
+        b[i * chunk_bytes % b.size] ^= 0x5A
+    return y
+
+
+def _three_way(x: np.ndarray, prev: np.ndarray, chunk_bytes: int):
+    """Run fused kernel, host twin and two-launch path on the same
+    (prev -> x) transition; assert bit-identical, return (idx, data)."""
+    pfp = ops.chunk_fingerprints(prev, chunk_bytes, interpret=True)
+    fp_f, idx_f, data_f = ops.fused_dirty_chunk_capture(
+        x, pfp, chunk_bytes, interpret=True)
+    fp_o, idx_o, data_o = ops.dirty_chunk_capture(
+        x, pfp, chunk_bytes, interpret=True)
+    fp_r, count_r, idx_r, data_r = fused_capture_ref(
+        x, np.asarray(pfp), chunk_bytes)
+    # fingerprints: kernel (i32) vs oracle (u32) — same bits
+    np.testing.assert_array_equal(np.asarray(fp_f).view(np.uint32), fp_r)
+    np.testing.assert_array_equal(np.asarray(fp_f), np.asarray(fp_o))
+    np.testing.assert_array_equal(
+        np.asarray(fp_f).view(np.uint32), fingerprint_ref(x, chunk_bytes))
+    # dirty indices
+    np.testing.assert_array_equal(idx_f, idx_o)
+    np.testing.assert_array_equal(idx_f, idx_r)
+    assert count_r == idx_r.size  # no overflow in the oracle run
+    # compacted payload
+    if idx_f.size == 0:
+        assert data_f is None and data_o is None and data_r.size == 0
+    else:
+        np.testing.assert_array_equal(data_f, data_o)
+        np.testing.assert_array_equal(data_f, data_r)
+    return idx_f, data_f
+
+
+@pytest.mark.parametrize("n,dirty", [
+    (CB // 4 * 6, [1, 3]),          # even chunks, scattered dirty
+    (CB // 4 * 6 + 31, [0, 6]),     # odd size, dirty partial tail chunk
+    (CB // 4 * 6 + 31, []),         # all-clean
+    (CB // 4 * 6 + 31, list(range(7))),   # all-dirty incl. tail
+    (CB // 4 - 7, [0]),             # single partial chunk, dirty
+    (CB // 4 - 7, []),              # single partial chunk, clean
+    (3, [0]),                       # tiny leaf, sub-lane
+])
+def test_fused_equals_ref_equals_two_launch(n, dirty):
+    rng = np.random.RandomState(n)
+    prev = rng.randn(n).astype(np.float32)
+    x = _dirty_some(prev, CB, dirty)
+    idx, _ = _three_way(x, prev, CB)
+    n_chunks = -(-x.nbytes // CB)
+    assert idx.size == len(set(i % n_chunks for i in dirty))
+
+
+def test_fused_non_f32_dtype():
+    """int16 leaves go through the bitcast+pad path; same contract."""
+    rng = np.random.RandomState(3)
+    prev = rng.randint(-1000, 1000, size=CB // 2 * 3 + 11, dtype=np.int16)
+    x = prev.copy()
+    x[5] += 1
+    idx, data = _three_way(x, prev, CB)
+    assert idx.tolist() == [0]
+
+
+def test_fused_overflow_falls_back_to_two_launch():
+    """When a step dirties more chunks than the compaction buffer holds,
+    the kernel's count overflows and the wrapper finishes via the
+    two-launch gather — results still bit-identical to the old path."""
+    rng = np.random.RandomState(4)
+    n_chunks = 4 * ops._FUSED_MIN_CAPACITY
+    prev = rng.randn(n_chunks * CB // 4).astype(np.float32)
+    x = prev + 1.0  # every chunk dirty
+    pfp = ops.chunk_fingerprints(prev, CB, interpret=True)
+    assert ops.fused_capacity(n_chunks, CB, 1) < n_chunks
+    fp_f, idx_f, data_f = ops.fused_dirty_chunk_capture(
+        x, pfp, CB, capacity_hint=1, interpret=True)
+    fp_o, idx_o, data_o = ops.dirty_chunk_capture(
+        x, pfp, CB, interpret=True)
+    np.testing.assert_array_equal(np.asarray(fp_f), np.asarray(fp_o))
+    np.testing.assert_array_equal(idx_f, idx_o)
+    np.testing.assert_array_equal(data_f, data_o)
+    assert idx_f.size == n_chunks
+
+
+def test_fused_capacity_policy():
+    """2x hint, clamped to leaf and VMEM budget, pow2-bucketed."""
+    assert ops.fused_capacity(1024, CB, 3) == 8      # floor
+    assert ops.fused_capacity(1024, CB, 100) == 256  # 2x hint, pow2
+    assert ops.fused_capacity(5, CB, 100) == 8       # leaf clamp, pow2 up
+    big = ops._FUSED_VMEM_BUDGET // (256 * 1024)
+    assert ops.fused_capacity(10 ** 6, 256 * 1024, 10 ** 6) <= 2 * big
+
+
+def test_fused_single_launch_single_d2h(monkeypatch):
+    """The acceptance property: one kernel trace contains exactly one
+    pallas launch (the fused kernel; the fingerprint/gather kernels are
+    never touched), and the non-overflow path performs exactly one
+    blocking device_get."""
+    launches = {"fused": 0, "fingerprint": 0, "gather": 0}
+    real_fused = K.fused_capture_blocks
+    real_fp = K.fingerprint_blocks
+    monkeypatch.setattr(
+        K, "fused_capture_blocks",
+        lambda *a, **k: launches.__setitem__("fused", launches["fused"] + 1)
+        or real_fused(*a, **k))
+    monkeypatch.setattr(
+        K, "fingerprint_blocks",
+        lambda *a, **k: launches.__setitem__(
+            "fingerprint", launches["fingerprint"] + 1) or real_fp(*a, **k))
+    gets = []
+    real_get = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda x: gets.append(1) or real_get(x))
+
+    rng = np.random.RandomState(5)
+    prev = rng.randn(CB // 4 * 8).astype(np.float32)
+    x = _dirty_some(prev, CB, [2, 5])
+    pfp_dev = jnp.asarray(fingerprint_ref(prev, CB).view(np.int32))
+    ops._fused_capture_impl.clear_cache()  # force a fresh trace
+    gets.clear()
+    fp, idx, data = ops.fused_dirty_chunk_capture(
+        x, pfp_dev, CB, interpret=True)
+    assert launches == {"fused": 1, "fingerprint": 0, "gather": 0}
+    assert len(gets) == 1, f"expected 1 blocking D2H, saw {len(gets)}"
+    assert idx.tolist() == [2, 5] and data is not None
+    assert isinstance(fp, jax.Array)  # fingerprints stay device-resident
+
+
+def test_fused_reuses_trace_across_steps(monkeypatch):
+    """Steady-state dirty-count fluctuation inside one pow2 bucket must
+    not retrace (the capacity bucketing exists exactly for this)."""
+    rng = np.random.RandomState(6)
+    prev = rng.randn(CB // 4 * 64).astype(np.float32)
+    pfp = ops.chunk_fingerprints(prev, CB, interpret=True)
+    caps = {ops.fused_capacity(64, CB, h) for h in (3, 4, 2, 4, 3)}
+    assert len(caps) == 1
+    for hint, k in ((3, 3), (4, 5), (2, 1)):
+        x = _dirty_some(prev, CB, list(range(k)))
+        _, idx, _ = ops.fused_dirty_chunk_capture(
+            x, pfp, CB, capacity_hint=hint, interpret=True)
+        assert idx.size == k
+
+
+# --- satellites ------------------------------------------------------------
+
+def test_delta_decode_threads_interpret(monkeypatch):
+    """ops.delta_decode forwards its interpret flag to delta_encode
+    instead of silently dropping it (a CPU test forcing interpret=True
+    must not fall through to the probed default)."""
+    seen = {}
+    real = ops.delta_encode
+
+    def spy(a, b, *, interpret=None):
+        seen["interpret"] = interpret
+        return real(a, b, interpret=interpret)
+
+    monkeypatch.setattr(ops, "delta_encode", spy)
+    prev = np.arange(512, dtype=np.float32)
+    cur = prev + 1
+    delta = real(cur, prev, interpret=True)
+    out = ops.delta_decode(delta, prev, np.float32, (512,), interpret=True)
+    assert seen["interpret"] is True
+    np.testing.assert_array_equal(out, cur)
+
+
+def test_host_sparse_capture_tail_chunk_roundtrip(tmp_path):
+    """Regression for the vectorized host compaction in _try_sparse: a
+    leaf whose nbytes is NOT a chunk multiple, with the partial tail
+    chunk among the dirty set, must roundtrip bit-identically through a
+    chained sparse save -> restore."""
+    from repro.core import (CheckpointManager, LocalFSBackend, OpLog,
+                            UpperHalf)
+    from repro.core.async_snapshot import materialize_manifest_chain
+
+    cb = 1024
+    n = cb * 5 + 57  # 6 chunks, last one partial
+    rng = np.random.RandomState(7)
+    leaf = rng.randint(0, 256, n, dtype=np.uint8)
+    mgr = CheckpointManager(
+        LocalFSBackend(str(tmp_path)), async_save=False,
+        delta_base_interval=4, sparse_capture=True,
+        sparse_chunk_bytes=cb, sparse_min_bytes=cb)
+    up = UpperHalf()
+    up.register("blob", "params", {"x": leaf})
+    mgr.save(1, up, OpLog())
+    # dirty chunk 1 AND the partial tail chunk
+    leaf[cb + 3] ^= 0xA5
+    leaf[cb * 5 + 11] ^= 0x3C
+    up.update("blob", {"x": leaf})
+    mgr.save(2, up, OpLog())
+    assert mgr.stats["sparse_leaves"] >= 1
+    assert mgr.stats["dirty_chunks"] == 2
+    manifest, entries = materialize_manifest_chain(mgr.backend, 2)
+    assert manifest["format"] == 3
+    np.testing.assert_array_equal(entries["blob"]["['x']"], leaf)
+
+
+def test_encode_leaf_sparse_unsorted_idx_guard():
+    """encode_leaf_sparse tolerates an unsorted dirty set (sorts it with
+    its payload) — decode still reproduces the current bytes."""
+    from repro.core import delta as deltamod
+    cb = 256
+    n = cb * 4
+    rng = np.random.RandomState(8)
+    prev = rng.randint(0, 256, n, dtype=np.uint8)
+    cur = prev.copy()
+    for i in (3, 0, 2):
+        cur[i * cb] ^= 0xFF
+    idx = np.array([3, 0, 2], np.int64)
+    compact = np.stack([cur[i * cb:(i + 1) * cb] for i in idx])
+    blobs = {}
+    mirror = prev.copy()
+    meta = deltamod.encode_leaf_sparse(
+        (n,), np.uint8, cb, 4, idx, compact, mirror,
+        lambda k, d: blobs.setdefault(k, d), lambda k: k in blobs)
+    np.testing.assert_array_equal(mirror, cur)
+    out = deltamod.decode_leaf(meta, blobs.__getitem__, prev=prev)
+    np.testing.assert_array_equal(out, cur)
+
+
+# --- property suite (hypothesis when available, pinned sweep always) -------
+
+def _property_case(n_chunks, tail, mask_bits, seed):
+    """For ANY leaf geometry and change mask — odd sizes, partial tail
+    chunks, all-clean, all-dirty, single-chunk — the fused kernel, the
+    ref.py host twin and the old two-launch path agree bit-for-bit on
+    fingerprints, dirty indices and compacted bytes."""
+    rng = np.random.RandomState(seed)
+    nbytes = max(4, n_chunks * CB - tail) // 4 * 4
+    prev = rng.randint(0, 256, nbytes, dtype=np.uint8).view(np.float32)
+    real_chunks = -(-nbytes // CB)
+    dirty = [i for i in range(real_chunks) if (mask_bits >> i) & 1]
+    cur = prev.copy()
+    b = cur.view(np.uint8)
+    for i in dirty:
+        off = i * CB
+        b[off] ^= rng.randint(1, 256)
+    _three_way(cur, prev, CB)
+
+
+def test_fused_three_way_pinned_sweep():
+    """Deterministic slice of the property space — runs even where
+    hypothesis is not installed, so the three-way contract is never
+    entirely skipped."""
+    rng = np.random.RandomState(9)
+    for _ in range(20):
+        _property_case(int(rng.randint(1, 11)), int(rng.randint(0, CB)),
+                       int(rng.randint(0, 2 ** 10)), int(rng.randint(2 ** 16)))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image ships without hypothesis
+    pass
+else:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        n_chunks=st.integers(1, 10),
+        tail=st.integers(0, CB - 1),
+        mask_bits=st.integers(0, 2 ** 10 - 1),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_fused_three_way_property(n_chunks, tail, mask_bits, seed):
+        _property_case(n_chunks, tail, mask_bits, seed)
