@@ -1,0 +1,305 @@
+"""Time-to-first-admission after restore: streaming vs full-materialize.
+
+The restore pipeline (core.streaming) claims a restored serving engine
+can admit its first request while the bulk of the checkpoint — the KV
+cache, the cold tier — is still in flight. This benchmark measures that
+claim end to end through the public API, against a bandwidth-limited
+store (per-GET latency plus per-byte transfer time — a stand-in for a
+remote object store; local-FS numbers would hide exactly the I/O the
+pipeline overlaps, same spirit as mttr.py's virtual clock). The live
+engine holds long prompts, so the checkpoint is shaped like production:
+a small hot tier (sessions, scheduler state) and a KV cache that is
+most of the bytes.
+
+  eager_ttfa_s        restore with the barrier materializer (every blob
+                      fetched and decoded before the engine exists),
+                      then submit + admit one new request;
+  stream_ttfa_s       the same restore call with ``streaming=True`` —
+                      the engine binds after the hot tier, admits the
+                      new request while the cache streams behind it;
+  stream_drained_s    ... and on to fully drained, for context.
+
+Both walls are restore + first admission; the one-time XLA compile of
+the admission prefill is identical on both paths and an order of
+magnitude noisier than the I/O under test, so it is paid once outside
+the timed windows (shared pre-compiled fn, see _warm_admission).
+
+Both engines then run the same workload to completion and must produce
+byte-identical outcomes (digest row) — streaming is a schedule, not a
+different restore.
+
+CLI:
+  PYTHONPATH=src:. python benchmarks/restore_streaming.py \
+      [--smoke] [--check] [--json BENCH_restore_streaming.json]
+
+``--check`` is the CI gate (soft — shared-runner timing is noisy):
+time-to-first-admission under streaming must land in <= 0.5x the
+full-materialize wall, and the outcome digests must match.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+ARCHS = {"small": "starcoder2-3b-smoke", "medium": "qwen2.5-32b-smoke"}
+SMOKE_ARCHS = {"small": "starcoder2-3b-smoke"}
+
+# Long prompts make the KV cache carry real entropy (prefill state, not
+# elided zero chunks) — the cold tier must dominate the checkpoint the
+# way it does in production. One slot stays free at snapshot time so the
+# restored engine has somewhere to admit its first post-restore request.
+N_SLOTS, MAX_SEQ, N_REQS, PROMPT, MAX_NEW = 4, 512, 3, 400, 8
+GET_LATENCY_S = 0.003      # per-GET round trip of the simulated remote
+GET_BW_BYTES_S = 1.0e6     # ... and its transfer bandwidth
+RESTORE_WORKERS = 8        # same pool size for both restore paths
+ADMIT_RATIO_GATE = 0.5     # acceptance bar from the issue
+
+
+class _RemoteStore:
+    """A ShardedBackend with object-store read costs: a per-GET round
+    trip plus bytes/bandwidth on blob reads — the only knobs that
+    separate 'local SSD' from 'remote' for a restore. Writes are left
+    fast (snapshot cost is not under test). The streaming fetcher sees
+    this wrapper, finds no ``blob_sources`` override and no
+    ShardedBackend instance, and reads through the (slow) ``get_blob``
+    as a single source — the worst case for streaming, so the measured
+    win is a floor."""
+
+    def __init__(self, inner, latency_s: float, bw: float) -> None:
+        self._inner = inner
+        self._latency_s = latency_s
+        self._bw = bw
+
+    def get_blob(self, name: str) -> bytes:
+        data = self._inner.get_blob(name)
+        time.sleep(self._latency_s + len(data) / self._bw)
+        return data
+
+    def __getattr__(self, attr):
+        return getattr(self._inner, attr)
+
+
+def _requests(n, seed=0, prompt_len=PROMPT):
+    from repro.serving.engine import Request
+    rng = np.random.RandomState(seed)
+    return [Request(rid=seed * 1000 + i,
+                    prompt=rng.randint(1, 250,
+                                       size=prompt_len).astype(np.int32),
+                    max_new=MAX_NEW)
+            for i in range(n)]
+
+
+def _warm_admission(*engines):
+    """Compile the width-8 admission prefill once and share it across
+    the restored engines, so neither timed window pays the one-time XLA
+    compile (identical on both paths, and pure noise next to the I/O
+    under test — a production engine admits with a warm compile cache)."""
+    import jax.numpy as jnp
+
+    from repro.configs.base import ShapeConfig
+    from repro.models import model as M
+    from repro.serving.engine import jit_prefill
+
+    e0 = engines[0]
+    shape = ShapeConfig("admit_s8_b1", 8, 1, "prefill")
+    fn, _ = jit_prefill(e0.cfg, shape, e0.mesh, cache_len=e0.max_seq)
+    fn(e0.params, jnp.zeros((1, 8), jnp.int32),
+       M.init_cache(e0.cfg, 1, e0.max_seq))
+    for e in engines:
+        e._admit_prefill[8] = fn
+
+
+def _drain_digest(eng, extra_req) -> str:
+    """Run every live request (plus one more) to completion and digest
+    all their outputs — the bit-identity witness between the eager and
+    streaming engines."""
+    eng.submit(extra_req)
+    reqs = {r.rid: r for r in eng.live_requests()}
+    reqs[extra_req.rid] = extra_req
+    for _ in range(600):
+        if not eng.step() and not eng.queue:
+            break
+    h = hashlib.blake2b(digest_size=12)
+    for rid in sorted(reqs):
+        h.update(str(rid).encode())
+        h.update(np.asarray(reqs[rid].out, np.int64).tobytes())
+    h.update(np.asarray(eng.slot_pos).tobytes())
+    return h.hexdigest()
+
+
+def _scenario(arch: str) -> list:
+    """Build + checkpoint one live engine, then restore it twice (eager
+    and streaming) against the bandwidth-limited store. Returns rows."""
+    import jax
+
+    from repro.api import CheckpointSession, Policy
+    from repro.configs import registry as cfg_registry
+    from repro.core.backends.sharded import ShardedBackend
+    from repro.models import model as M
+    from repro.serving.engine import ServingEngine
+
+    root = tempfile.mkdtemp()
+    rows = []
+    sessions = []
+    try:
+        cfg = cfg_registry.resolve_config(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        policy = Policy(chain=1)
+
+        be = ShardedBackend(root, n_hosts=4, replicate=True)
+        sess = CheckpointSession(be, policy)
+        sessions.append(sess)
+        eng = ServingEngine.create(arch, params, (1, 1),
+                                   n_slots=N_SLOTS, max_seq=MAX_SEQ,
+                                   manager=sess.manager)
+        sess.attach(eng)
+        for r in _requests(N_REQS):
+            eng.submit(r)
+        for _ in range(6):
+            eng.step()
+        sess.snapshot(block=True)
+
+        def restored(streaming):
+            slow = _RemoteStore(
+                ShardedBackend(root, n_hosts=4, replicate=True),
+                GET_LATENCY_S, GET_BW_BYTES_S)
+            s = CheckpointSession.from_manager(
+                policy.build_manager(slow), policy)
+            sessions.append(s)
+            return s.restore(streaming=streaming, params=params,
+                             n_slots=N_SLOTS, workers=RESTORE_WORKERS)
+
+        t0 = time.monotonic()
+        eager = restored(streaming=False)
+        eager_restore_s = time.monotonic() - t0
+
+        t0 = time.monotonic()
+        stream = restored(streaming=True)
+        stream_restore_s = time.monotonic() - t0
+
+        _warm_admission(eager, stream)   # untimed, shared (see docstring)
+
+        # identical new request for both engines (Request objects are
+        # mutated by the engine, so each gets its own copy)
+        new_eager, = _requests(1, seed=99, prompt_len=6)
+        new_stream, = _requests(1, seed=99, prompt_len=6)
+
+        t0 = time.monotonic()
+        stream.submit(new_stream)
+        stream._admit()
+        assert any(r is new_stream for r in stream.slot_req), \
+            "first request not admitted"
+        stream_ttfa = stream_restore_s + (time.monotonic() - t0)
+
+        t0 = time.monotonic()
+        eager.submit(new_eager)
+        eager._admit()
+        eager_ttfa = eager_restore_s + (time.monotonic() - t0)
+
+        rows.append((f"restore_streaming/{arch}/eager_ttfa_s",
+                     eager_ttfa * 1e6,
+                     f"restore {eager_restore_s:.2f}s + admit"))
+        rows.append((f"restore_streaming/{arch}/stream_ttfa_s",
+                     stream_ttfa * 1e6,
+                     f"restore {stream_restore_s:.2f}s + admit; "
+                     f"ratio={stream_ttfa / eager_ttfa:.3f} (gate <= "
+                     f"{ADMIT_RATIO_GATE})"))
+
+        t0 = time.monotonic()
+        d_stream = _drain_digest(stream, _requests(1, seed=7,
+                                                   prompt_len=6)[0])
+        drained_s = stream_ttfa + (time.monotonic() - t0)
+        st = stream.incarnation.stream_timings() or {}
+        rows.append((f"restore_streaming/{arch}/stream_drained_s",
+                     drained_s * 1e6,
+                     f"overlap={st.get('decode_overlap_pct', 0):.0f}% "
+                     f"faults={st.get('lazy_faults', 0)}"))
+
+        d_eager = _drain_digest(eager, _requests(1, seed=7,
+                                                 prompt_len=6)[0])
+        match = d_eager == d_stream
+        rows.append((f"restore_streaming/{arch}/digest_match",
+                     float(match),
+                     f"eager={d_eager} stream={d_stream}"))
+        return rows
+    finally:
+        for s in sessions:
+            try:
+                s.close()
+            except Exception:
+                pass
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def run(smoke: bool = False) -> list:
+    import sys
+    rows = []
+    for name, arch in (SMOKE_ARCHS if smoke else ARCHS).items():
+        try:
+            rows.extend(_scenario(arch))
+        except Exception as e:  # noqa: BLE001 — surfaced by check()
+            print(f"# restore_streaming/{name} FAILED: {e!r}",
+                  file=sys.stderr)
+    return rows
+
+
+def check(rows: list, archs) -> None:
+    """The gate: for every size, time-to-first-admission under streaming
+    landed in <= ADMIT_RATIO_GATE x the full-materialize wall, and the
+    drained outcomes are bit-identical."""
+    by_name = {n: (us, d) for n, us, d in rows}
+    failures = []
+    for arch in archs:
+        eager = by_name.get(f"restore_streaming/{arch}/eager_ttfa_s")
+        admit = by_name.get(f"restore_streaming/{arch}/stream_ttfa_s")
+        digest = by_name.get(f"restore_streaming/{arch}/digest_match")
+        if eager is None or admit is None or digest is None:
+            failures.append(f"{arch}: scenario did not complete")
+            continue
+        ratio = admit[0] / eager[0]
+        if ratio > ADMIT_RATIO_GATE:
+            failures.append(
+                f"{arch}: first admission at {ratio:.2f}x the eager "
+                f"wall (gate {ADMIT_RATIO_GATE}x): "
+                f"stream {admit[0] / 1e6:.2f}s vs eager "
+                f"{eager[0] / 1e6:.2f}s")
+        if digest[0] != 1.0:
+            failures.append(
+                f"{arch}: streaming outcome diverged from eager "
+                f"({digest[1]})")
+    if failures:
+        raise SystemExit("restore_streaming gate FAILED: "
+                         + "; ".join(failures))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest size only (CI regression gate)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless streaming admits in <= "
+                         f"{ADMIT_RATIO_GATE}x the full-materialize "
+                         "wall with bit-identical outcomes")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (CI artifact)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for n, us, derived in rows:
+        print(f"{n},{us:.1f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "us": us, "derived": d}
+                       for n, us, d in rows], f, indent=2)
+    if args.check:
+        check(rows, (SMOKE_ARCHS if args.smoke else ARCHS).values())
+
+
+if __name__ == "__main__":
+    main()

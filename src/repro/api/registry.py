@@ -64,6 +64,13 @@ def register_backend(scheme: str, *, replace: bool = False) -> Callable:
 def parse_store_spec(spec: str) -> Tuple[str, str, Dict[str, str]]:
     """``scheme:/path?k=v&...`` -> (scheme, path, params).
 
+    One key is special: ``over=`` swallows the *rest of the query
+    string* verbatim, so a whole nested store spec — query and all —
+    can ride inside another one (``cached:/ssd?over=sharded:/remote?
+    hosts=4&replicate=1``). That makes ``over`` necessarily the last
+    parameter of its level; the outer split already stops at the first
+    ``?``, so the nested spec's own ``?`` and ``&`` survive intact.
+
     Raises ``PolicyError`` with the expected shape spelled out — a store
     spec is user-facing configuration, so the error must be actionable.
     """
@@ -78,12 +85,16 @@ def parse_store_spec(spec: str) -> Tuple[str, str, Dict[str, str]]:
         raise PolicyError(f"malformed backend spec {spec!r}: {shape}")
     params: Dict[str, str] = {}
     if query:
-        for piece in query.split("&"):
+        pieces = query.split("&")
+        for i, piece in enumerate(pieces):
             key, eq, value = piece.partition("=")
             if not key or not eq:
                 raise PolicyError(
                     f"malformed backend spec {spec!r}: query piece "
                     f"{piece!r} is not 'key=value'; {shape}")
+            if key == "over":
+                params[key] = "&".join([value] + pieces[i + 1:])
+                break
             params[key] = value
     return scheme, path, params
 
@@ -164,6 +175,23 @@ def _sharded_backend(path: str, *, hosts="4", replicate="0", writers="4",
                           replicate=_as_bool("replicate", replicate),
                           writers=n_writers,
                           fsync=_as_bool("fsync", fsync))
+
+
+@register_backend("cached")
+def _cached_backend(path: str, *, over="", fsync="0"):
+    """Local read-through blob cache over any other registered store:
+    ``cached:/ssd-cache?over=sharded:/remote?hosts=4``. Reads hit the
+    local tier first and warm it on a miss; streaming restore fetches
+    from both tiers and primes the cache as it goes."""
+    from repro.core.backends.cached import CachedBackend
+    if not over:
+        raise PolicyError(
+            "store scheme 'cached:' needs the store it caches: "
+            "'cached:/local-cache?over=<inner spec>', e.g. "
+            "'cached:/ssd/cache?over=sharded:/remote?hosts=4' (over= "
+            "swallows the rest of the spec, so it must come last)")
+    return CachedBackend(path, resolve_backend(over),
+                         fsync=_as_bool("fsync", fsync))
 
 
 # ---------------------------------------------------------------------------

@@ -159,7 +159,9 @@ class CheckpointSession:
                 expect_kind: Optional[str] = None,
                 mesh_factory: Optional[Callable] = None,
                 rewrite_op: Optional[Callable] = None,
+                workers: Optional[int] = None,
                 decode_workers: Optional[int] = None,
+                streaming: Optional[bool] = None,
                 **app_kwargs: Any) -> Any:
         """Rebuild and attach the checkpointed app.
 
@@ -168,7 +170,23 @@ class CheckpointSession:
         drives the incarnation through a ``RestoreContext`` and returns
         the app; ``app_kwargs`` pass through to it (e.g. ``params=`` /
         ``n_slots=`` for the serving engine). ``expect_kind`` guards a
-        caller that only handles one workload."""
+        caller that only handles one workload.
+
+        ``workers`` sizes the restore's fetch/decode pools, threaded
+        through the incarnation to ``CheckpointManager.restore``
+        (``decode_workers`` is the older spelling of the same knob).
+        ``streaming`` streams the payload — the app comes back once the
+        hot tier is decoded and cold entries page in on first touch —
+        with None deferring to ``policy.streaming_restore``. Streaming
+        and eager restores are bit-identical."""
+        if workers is not None and decode_workers is not None \
+                and workers != decode_workers:
+            raise PolicyError(
+                f"workers={workers} and decode_workers={decode_workers} "
+                "are the same knob spelled twice; pass one")
+        workers = workers if workers is not None else decode_workers
+        if streaming is None:
+            streaming = self.policy.streaming_restore
         if step in (None, "latest"):
             resolved = self.manager.resolve_step(None)
         else:
@@ -181,7 +199,9 @@ class CheckpointSession:
         ctx = RestoreContext(self.manager, resolved, job,
                              mesh_factory=mesh_factory,
                              rewrite_op=rewrite_op,
-                             decode_workers=decode_workers)
+                             decode_workers=workers,
+                             streaming=bool(streaming),
+                             lazy_kinds=self.policy.lazy_kinds)
         return self.attach(binder(ctx, **app_kwargs))
 
     # --- supervision ---------------------------------------------------

@@ -1,8 +1,10 @@
 from repro.core.backends.base import CheckpointBackend
+from repro.core.backends.cached import CachedBackend
 from repro.core.backends.localfs import LocalFSBackend
 from repro.core.backends.sharded import ShardedBackend
 
-BACKENDS = {"localfs": LocalFSBackend, "sharded": ShardedBackend}
+BACKENDS = {"localfs": LocalFSBackend, "sharded": ShardedBackend,
+            "cached": CachedBackend}
 
 
 def make_backend(kind: str, root: str, **kw) -> CheckpointBackend:

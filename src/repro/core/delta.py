@@ -451,13 +451,23 @@ def deserialize_tensor(meta: Dict[str, Any],
     return decode_leaf(meta, get_blob, prev=prev)
 
 
+def leaf_blob_names(meta: Dict[str, Any]) -> List[str]:
+    """Every blob hash one leaf's manifest meta references, in decode
+    order (elided zero chunks excluded). The streaming-restore fetch
+    planner sizes its per-leaf dependency counters from this — a leaf
+    becomes decodable the moment the last of exactly these blobs lands."""
+    out: List[str] = []
+    for pmeta in meta["parts"].values():
+        if "dirty" in pmeta:
+            out.extend(h for _, h, _ in pmeta["dirty"])
+        else:
+            out.extend(h for h in pmeta["chunks"] if h is not None)
+    return out
+
+
 def referenced_hashes(manifest: Dict[str, Any]) -> set:
     out = set()
     for entry in manifest.get("entries", {}).values():
         for leaf in entry["leaves"].values():
-            for pmeta in leaf["parts"].values():
-                if "dirty" in pmeta:
-                    out.update(h for _, h, _ in pmeta["dirty"])
-                else:
-                    out.update(h for h in pmeta["chunks"] if h is not None)
+            out.update(leaf_blob_names(leaf))
     return out

@@ -21,9 +21,9 @@ protocol, so a crash mid-repair leaves only invisible temp files.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.backends.base import write_atomic
 from repro.core.backends.sharded import ShardedBackend
@@ -145,6 +145,42 @@ def repair(backend: ShardedBackend, host: Optional[int] = None,
     return rep
 
 
+def blob_sources(backend, name: str) -> List[Tuple[str, Callable[[], bytes]]]:
+    """Every place one blob can be read from, as ordered
+    ``(label, read_callable)`` pairs — the preferred source first.
+
+    This is the streaming restore's fetch fan-out: a ``ShardedBackend``
+    exposes the primary copy on the owner host and the ``replica_`` copy
+    on its (h+1)%N ring successor as *independent* sources, so the
+    fetcher can hedge a slow or dead primary with its peer instead of
+    serializing behind ``get_blob``'s internal failover. Backends with
+    their own tiering (e.g. the ``cached:`` read-through store) override
+    the enumeration via a ``blob_sources`` method; anything else is a
+    single opaque source. Each callable raises (``FileNotFoundError``,
+    ``IOError``) when its copy is unavailable *at read time* — liveness
+    is judged per read, not per plan."""
+    own = getattr(backend, "blob_sources", None)
+    if callable(own):
+        return own(name)
+    if isinstance(backend, ShardedBackend):
+        out: List[Tuple[str, Callable[[], bytes]]] = []
+        for host, path in backend._placements(name):
+            if host in backend._failed_hosts:
+                continue
+
+            def read(p=path, h=host) -> bytes:
+                if h in backend._failed_hosts:
+                    raise IOError(f"host {h} down; read of {p.name} lost")
+                return p.read_bytes()
+
+            out.append((f"host_{host:03d}", read))
+        if out:
+            return out
+        # every placement's host is failed: fall through to get_blob so
+        # the error message names each dead copy
+    return [("store", lambda: backend.get_blob(name))]
+
+
 def verify_restorable(backend: ShardedBackend, manifest: dict,
                       exclude: Optional[set] = None) -> List[str]:
     """Blob names a manifest references that no live host can serve —
@@ -162,3 +198,76 @@ def verify_restorable(backend: ShardedBackend, manifest: dict,
     if exclude:
         refs -= exclude
     return sorted(h for h in refs if not backend.has_blob(h))
+
+
+# ---------------------------------------------------------------------------
+# operator CLI: survey (and optionally repair) replica health
+# ---------------------------------------------------------------------------
+
+def report_json(rep: RepairReport) -> Dict:
+    """A ``RepairReport`` as the stable JSON shape the CLI emits (the
+    dataclass fields plus the derived ``degraded`` verdict)."""
+    out = asdict(rep)
+    out["degraded"] = rep.degraded
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    """``python -m repro.core.replication STORE [--json] [--repair]``
+
+    Survey replica health before a planned restore: which blobs lost
+    their primary or replica copy, and which lost every copy. Exits 0
+    on a healthy (or fully repaired) store, 1 when degraded — so
+    ``scan --json || page-someone`` works as an operator probe. The
+    store spec goes through the same registry as ``--store``
+    (``sharded:/path?hosts=4&replicate=1``, or ``cached:`` over it)."""
+    import argparse
+    import json as jsonmod
+    import sys
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.replication",
+        description="survey (and repair) peer-replica health of a "
+                    "sharded checkpoint store")
+    ap.add_argument("store", help="store spec, e.g. "
+                                  "'sharded:/path?hosts=4&replicate=1'")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit the report as JSON on stdout")
+    ap.add_argument("--repair", action="store_true",
+                    help="rebuild missing copies from surviving peers "
+                         "(scan only, by default)")
+    ap.add_argument("--host", type=int, default=None,
+                    help="with --repair: the host whose storage was "
+                         "lost wholesale")
+    args = ap.parse_args(argv)
+
+    from repro.api.registry import resolve_backend
+    backend = resolve_backend(args.store)
+    # a cached: front is a read-through view; replication health is a
+    # property of the replicating store underneath it
+    backend = getattr(backend, "inner", backend)
+    if not isinstance(backend, ShardedBackend):
+        print(f"error: {args.store!r} resolves to "
+              f"{type(backend).__name__}, but replica scan needs a "
+              "sharded store (scheme 'sharded:', or 'cached:' over it)",
+              file=sys.stderr)
+        return 2
+    rep = repair(backend, host=args.host) if args.repair else scan(backend)
+    if args.as_json:
+        print(jsonmod.dumps(report_json(rep), indent=2, sort_keys=True))
+    else:
+        verb = "repair" if args.repair else "scan"
+        print(f"{verb}: {rep.blobs} blobs across {rep.hosts} hosts; "
+              f"{rep.missing_primaries} missing primaries, "
+              f"{rep.missing_replicas} missing replicas, "
+              f"{rep.restored} restored, "
+              f"{len(rep.unrecoverable)} unrecoverable")
+    # a repair's report keeps what it *found* (and fixed); the exit code
+    # answers "is the store healthy now" — so re-survey after a repair
+    health = scan(backend) if args.repair else rep
+    return 1 if health.degraded else 0
+
+
+if __name__ == "__main__":  # pragma: no cover — exercised via main()
+    import sys
+    sys.exit(main())

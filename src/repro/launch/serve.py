@@ -35,7 +35,7 @@ import numpy as np
 from repro.configs import registry as cfg_registry
 from repro.launch.common import (add_store_args, build_session,
                                  parse_resume_arg, resolve_store,
-                                 validate_resume)
+                                 restore_timings_line, validate_resume)
 from repro.launch.supervise import (SimWorldDriver, add_supervise_args,
                                     parse_supervise_args)
 from repro.models import model as M
@@ -109,13 +109,13 @@ def main(argv=None) -> int:
 
     if resume:
         eng = sess.restore(step=step, expect_kind="serving",
-                           params=params, n_slots=args.slots)
+                           params=params, n_slots=args.slots,
+                           streaming=args.streaming_restore or None)
         reqs = eng.live_requests()
         inc = eng.incarnation
         print(f"[serve] RESUMED at engine step {eng.steps} with "
               f"{len(reqs)} live requests on {eng.n_slots} slots "
-              f"(materialize {inc.timings['materialize_s']:.2f}s, "
-              f"replay {inc.timings['replay_s']:.2f}s)")
+              f"({restore_timings_line(inc)})")
     else:
         eng = ServingEngine.create(
             args.arch, params, (n_dev, 1), n_slots=args.slots,

@@ -39,7 +39,7 @@ import jax
 from repro.core import FailureAction
 from repro.launch.common import (add_store_args, build_session,
                                  parse_resume_arg, resolve_store,
-                                 validate_resume)
+                                 restore_timings_line, validate_resume)
 from repro.launch.supervise import (SimWorldDriver, add_supervise_args,
                                     parse_supervise_args)
 from repro.train.loop import Trainer, TrainJob
@@ -93,13 +93,12 @@ def main(argv=None) -> int:
             return 2
 
     if sess.latest_step() is not None:
-        tr = sess.restore(step=resume_step, expect_kind="train")
+        tr = sess.restore(step=resume_step, expect_kind="train",
+                          streaming=args.streaming_restore or None)
         inc = tr.incarnation
         print(f"[launch] RESUMED {args.arch} at step "
               f"{tr.checkpoint_step()} from {spec} "
-              f"(materialize {inc.timings['materialize_s']:.2f}s, "
-              f"replay {inc.timings['replay_s']:.2f}s, "
-              f"rebind {inc.timings.get('rebind_s', 0.0):.2f}s)")
+              f"({restore_timings_line(inc)})")
     else:
         job = TrainJob(arch=args.arch, shape_key=args.shape)
         tr = sess.attach(Trainer(job, (d, args.model_mesh),

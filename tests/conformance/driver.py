@@ -123,9 +123,65 @@ def run_kill(spec: FamilySpec, store: str) -> str:
             f"{spec.family}: restored at step {at}, wanted {boundary}"
         dr.advance(app2, dr.total - at)
         got = dr.digest(app2)
+
+        # same cell, streaming schedule: restore the same step with the
+        # pipelined materializer (hot tier eager, cold leaves paged in
+        # on first touch) and continue — streaming is a schedule, not a
+        # different restore, so the digest must not move
+        app3 = sess.restore("latest", streaming=True,
+                            **dr.restore_kwargs())
+        at3 = dr.step_of(app3)
+        assert at3 == boundary, \
+            f"{spec.family}: streaming restored at step {at3}, " \
+            f"wanted {boundary}"
+        dr.advance(app3, dr.total - at3)
+        got_streamed = dr.digest(app3)
     assert got == want, \
         f"{spec.family}: post-restore digest {got} != reference {want}"
+    assert got_streamed == want, \
+        f"{spec.family}: streaming restore digest {got_streamed} != " \
+        f"reference {want}"
     _KILL[(spec.family, store.split(":", 1)[0])] = got
+    return got
+
+
+def run_degraded(spec: FamilySpec, store: str) -> str:
+    """One dead peer per shard ring: the replicated package loses a
+    host wholesale after the checkpoint commits. The streaming restore
+    must route its fetches through the surviving copies — same digest
+    as the reference run AND as the degraded eager restore (fallback is
+    a routing decision, never a correctness relaxation)."""
+    dr = spec.train
+    want = reference_digest(spec)
+    policy = Policy(interval=dr.interval, chain=3, keep_last=4)
+    with CheckpointSession(store, policy) as sess:
+        app = sess.attach(dr.fresh())
+        half = dr.total // 2
+        for _ in range(half):
+            dr.advance(app, 1)
+            sess.maybe_snapshot()
+        sess.wait()
+        boundary = (half // dr.interval) * dr.interval
+        del app                               # hard kill
+        sess.backend.fail_host(1)             # ... and a dead peer
+
+        app2 = sess.restore("latest", streaming=True,
+                            **dr.restore_kwargs())
+        at = dr.step_of(app2)
+        assert at == boundary, \
+            f"{spec.family}: degraded streaming restored at {at}, " \
+            f"wanted {boundary}"
+        dr.advance(app2, dr.total - at)
+        got = dr.digest(app2)
+
+        app3 = sess.restore("latest", **dr.restore_kwargs())
+        dr.advance(app3, dr.total - boundary)
+        got_eager = dr.digest(app3)
+    assert got == want, \
+        f"{spec.family}: degraded streaming digest {got} != " \
+        f"reference {want}"
+    assert got_eager == got, \
+        f"{spec.family}: degraded eager {got_eager} != streaming {got}"
     return got
 
 

@@ -36,8 +36,14 @@ def _backend_for(mode: str, backend: str) -> str:
 
 
 def fast_cells() -> List[Cell]:
+    # one targeted degradation cell rides in the fast tier: the
+    # replicated sharded package loses a peer and the streaming restore
+    # must route around it. Degradation is a store property, not a
+    # family property, so the full family×degraded product would be
+    # redundant — one family stands in for all of them.
     return [Cell(f, m, _backend_for(m, "localfs"))
-            for f in FAMILIES for m in MODES]
+            for f in FAMILIES for m in MODES] \
+        + [Cell("attention", "degraded", "sharded")]
 
 
 def slow_cells() -> List[Cell]:

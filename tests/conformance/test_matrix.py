@@ -36,6 +36,11 @@ def _run(cell: matrix.Cell, tmp_path) -> None:
         driver.run_shrink(spec, _store(cell.backend, tmp_path))
     elif cell.mode == "commit":
         driver.run_commit(spec, _store(cell.backend, tmp_path))
+    elif cell.mode == "degraded":
+        # a dead peer only has surviving copies to serve when the
+        # store replicates — the cell pins the replicated package
+        driver.run_degraded(
+            spec, f"sharded:{tmp_path}/d?hosts=3&replicate=1")
     else:  # pragma: no cover — the enumeration owns the mode list
         raise AssertionError(f"unknown mode {cell.mode}")
 

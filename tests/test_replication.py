@@ -156,6 +156,77 @@ def test_put_blob_to_down_host_raises(tmp_path):
     assert be.get_blob(name) == b"payload"
 
 
+def test_streaming_restore_with_dead_peer_matches_eager(tmp_path):
+    """Streaming restore under degradation: one dead host per shard ring
+    (replicate=True, so every blob keeps a surviving copy) must restore
+    bit-identically to the eager restore of the healthy store — the
+    fetcher routes around the dead peer via the surviving placements,
+    it does not relax correctness."""
+    be = ShardedBackend(str(tmp_path), n_hosts=3, replicate=True)
+    mgr = CheckpointManager(be, async_save=False)
+    up = _mk_upper(7)
+    rng = np.random.RandomState(77)
+    up.register("opt_state", "opt_state",        # a cold-tier entry too
+                {"m": rng.randn(4096).astype(np.float32)})
+    mgr.save(1, up, OpLog())
+
+    eager = mgr.restore(1)                       # healthy reference
+    be.fail_host(1)
+    streamed = mgr.restore(1, streaming=True)
+    for name, by_path in eager.entries.items():
+        got = streamed.entries[name]
+        for path, want in by_path.items():
+            np.testing.assert_array_equal(np.asarray(got[path]),
+                                          np.asarray(want))
+    t = streamed.streamer.timings()
+    served = t["fetch_bytes_per_source"]
+    assert sum(served.values()) > 0
+    assert "host_001" not in served, \
+        f"dead host served bytes: {served}"
+
+
+def test_scan_cli_json_contract(tmp_path, capsys):
+    """``python -m repro.core.replication STORE --json``: the emitted
+    JSON carries every report field plus the derived verdict, and the
+    exit code is the health bit (0 healthy, 1 degraded) so the CLI
+    works as an operator probe."""
+    import json
+
+    spec = f"sharded:{tmp_path}?hosts=3&replicate=1"
+    be = ShardedBackend(str(tmp_path), n_hosts=3, replicate=True)
+    mgr = CheckpointManager(be, async_save=False)
+    mgr.save(1, _mk_upper(8), OpLog())
+
+    rc = replication.main([spec, "--json"])
+    rep = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert set(rep) == {"hosts", "blobs", "missing_primaries",
+                        "missing_replicas", "restored", "unrecoverable",
+                        "degraded"}
+    assert rep["degraded"] is False and rep["blobs"] > 0
+
+    census = _blob_census(be)
+    h, name = next((h, n) for h, names in census.items()
+                   for n in names if not n.startswith("replica_"))
+    (be.root / f"host_{h:03d}" / name).unlink()
+    rc = replication.main([spec, "--json"])
+    rep = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert rep["degraded"] is True and rep["missing_primaries"] == 1
+
+    rc = replication.main([spec, "--repair", "--json"])
+    rep = json.loads(capsys.readouterr().out)
+    assert rc == 0 and rep["restored"] == 1
+
+
+def test_scan_cli_rejects_non_sharded_store(tmp_path, capsys):
+    """A localfs store has no replicas to scan — the CLI says so on
+    stderr and exits 2 (usage), instead of reporting fake health."""
+    rc = replication.main([f"localfs:{tmp_path}", "--json"])
+    err = capsys.readouterr().err
+    assert rc == 2 and "sharded" in err
+
+
 def test_save_through_manager_fails_loudly_on_down_host(tmp_path):
     """End-to-end: a snapshot through the async pipeline with a down
     (unreplicated) host raises at save time and publishes nothing."""

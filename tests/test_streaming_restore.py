@@ -1,0 +1,347 @@
+"""core.streaming + the cached: tier: streaming restore is a schedule,
+not a different restore.
+
+The pipeline (parallel fetch -> decode-while-fetch -> first-touch cold
+leaves) must produce bit-identical state to the barrier materializer
+across delta chains; the hot tier must come back before the cold tier
+is even fetchable; the ``workers=`` knob must thread from the public
+session API down to the manager; and the ``cached:`` read-through
+store must serve the second restore from local bytes."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (CheckpointSession, Policy, PolicyError,
+                       UpperHalf, parse_store_spec, register_app_kind,
+                       resolve_backend)
+from repro.core import CheckpointManager, OpLog, ShardedBackend
+from repro.core import delta as deltamod
+from repro.core.backends.cached import CachedBackend
+from repro.core.backends.localfs import LocalFSBackend
+from repro.core.streaming import (DEFAULT_LAZY_KINDS, LazyLeaves,
+                                  StreamingMaterializer)
+
+
+def _upper(seed=0, n=20_000):
+    rng = np.random.RandomState(seed)
+    up = UpperHalf()
+    up.register("params", "params",
+                {"w": rng.randn(n).astype(np.float32),
+                 "b": rng.randn(128).astype(np.float32)})
+    up.register("opt_state", "opt_state",
+                {"m": rng.randn(n).astype(np.float32),
+                 "v": rng.randn(n).astype(np.float32)})
+    up.register("step", "step", np.int64(seed))
+    return up
+
+
+def _save_chain(backend, steps=3, base_interval=4):
+    """A delta chain: steps after the base xor-encode against it."""
+    mgr = CheckpointManager(backend, async_save=False,
+                            delta_base_interval=base_interval)
+    rng = np.random.RandomState(42)
+    up = _upper(1)
+    for s in range(1, steps + 1):
+        # perturb a slice so deltas are small but real
+        w = up.get("params")["w"]
+        w[rng.randint(0, len(w), 64)] += 0.5
+        up.register("step", "step", np.int64(s))
+        mgr.save(s, up, OpLog())
+    return mgr
+
+
+def _assert_same_entries(eager, streamed):
+    for name, by_path in eager.entries.items():
+        got = streamed.entries[name]
+        assert set(got) == set(by_path)
+        for path, want in by_path.items():
+            np.testing.assert_array_equal(np.asarray(got[path]),
+                                          np.asarray(want))
+
+
+# --- bit-identity ------------------------------------------------------------
+
+@pytest.mark.parametrize("step", [1, 3])
+def test_streaming_matches_eager_across_delta_chain(tmp_path, step):
+    """Base step and deepest xor step both restore bit-identically
+    under the streaming schedule (localfs, chain=3)."""
+    be = LocalFSBackend(str(tmp_path))
+    mgr = _save_chain(be, steps=3)
+    eager = mgr.restore(step)
+    streamed = mgr.restore(step, streaming=True)
+    assert isinstance(streamed.entries["opt_state"], LazyLeaves)
+    assert isinstance(streamed.entries["params"], dict)  # hot: plain
+    _assert_same_entries(eager, streamed)
+    assert streamed.streamer.complete
+
+
+def test_streaming_custom_lazy_kinds(tmp_path):
+    """lazy_kinds is a policy, not a hardcode: making params the cold
+    tier flips which entries come back as lazy mappings — values
+    unchanged either way."""
+    be = LocalFSBackend(str(tmp_path))
+    mgr = _save_chain(be)
+    eager = mgr.restore(3)
+    streamed = mgr.restore(3, streaming=True, lazy_kinds=("params",))
+    assert isinstance(streamed.entries["params"], LazyLeaves)
+    assert isinstance(streamed.entries["opt_state"], dict)
+    _assert_same_entries(eager, streamed)
+
+
+# --- the hot tier does not wait for the cold tier ---------------------------
+
+class _GatedStore:
+    """Blocks reads of a chosen blob set until the gate opens — the
+    deterministic way to prove the hot tier binds while the cold tier
+    is still in flight (no sleeps, no races)."""
+
+    def __init__(self, inner, blocked):
+        self._inner = inner
+        self._blocked = set(blocked)
+        self.gate = threading.Event()
+
+    def get_blob(self, name):
+        if name in self._blocked:
+            assert self.gate.wait(20), "cold gate never opened"
+        return self._inner.get_blob(name)
+
+    def __getattr__(self, attr):
+        return getattr(self._inner, attr)
+
+
+def _entry_blobs(manifest, entry):
+    out = set()
+    for meta in manifest["entries"][entry]["leaves"].values():
+        out |= set(deltamod.leaf_blob_names(meta))
+    return out
+
+
+def test_hot_tier_binds_while_cold_blobs_unreadable(tmp_path):
+    be = LocalFSBackend(str(tmp_path))
+    _save_chain(be, steps=1)
+    m = be.get_manifest(1)
+    cold_blobs = _entry_blobs(m, "opt_state") - _entry_blobs(m, "params")
+    assert cold_blobs, "opt_state must own blobs for the gate to bite"
+
+    gated = _GatedStore(be, cold_blobs)
+    mgr = CheckpointManager(gated, async_save=False)
+    t0 = time.monotonic()
+    streamed = mgr.restore(1, streaming=True)
+    assert time.monotonic() - t0 < 10, "hot tier waited on cold blobs"
+    sm = streamed.streamer
+    assert not sm.complete
+    np.testing.assert_array_equal(
+        np.asarray(streamed.entries["step"][""]), np.int64(1))
+
+    cold = streamed.entries["opt_state"]
+    assert not cold.ready("['m']")
+    gated.gate.set()
+    cold.wait()                      # bulk page-in
+    sm.wait_all()
+    assert sm.complete
+    want = CheckpointManager(be, async_save=False).restore(1)
+    _assert_same_entries(want, streamed)
+
+
+def test_first_touch_fault_promotes_and_counts(tmp_path):
+    """Indexing a cold leaf before the background fetch reaches it is a
+    lazy fault: the value is served (promoted to the front of the fetch
+    queue) and the fault is counted in the timings."""
+    be = LocalFSBackend(str(tmp_path))
+    _save_chain(be, steps=1)
+    m = be.get_manifest(1)
+    cold_blobs = _entry_blobs(m, "opt_state") - _entry_blobs(m, "params")
+    gated = _GatedStore(be, cold_blobs)
+    mgr = CheckpointManager(gated, async_save=False)
+    streamed = mgr.restore(1, streaming=True)
+
+    got = {}
+    def touch():
+        got["m"] = np.asarray(streamed.entries["opt_state"]["['m']"])
+    t = threading.Thread(target=touch)
+    t.start()
+    time.sleep(0.05)                 # the touch is now blocked on fetch
+    gated.gate.set()
+    t.join(20)
+    assert not t.is_alive()
+    want = CheckpointManager(be, async_save=False).restore(1)
+    np.testing.assert_array_equal(got["m"],
+                                  np.asarray(want.entries["opt_state"]
+                                             ["['m']"]))
+    assert streamed.streamer.timings()["lazy_faults"] >= 1
+
+
+def test_missing_blob_fails_loudly_not_lazily(tmp_path):
+    """A blob no source can serve fails the dependent leaves with a
+    RestoreError carrying the cause — never a silent zero tensor."""
+    from repro.api.errors import RestoreError
+    be = LocalFSBackend(str(tmp_path))
+    _save_chain(be, steps=1)
+    m = be.get_manifest(1)
+    victim = sorted(_entry_blobs(m, "params"))[0]
+    (be.root / "blobs" / victim[:2] / victim).unlink()
+    mgr = CheckpointManager(be, async_save=False)
+    with pytest.raises(RestoreError):
+        mgr.restore(1, streaming=True)
+
+
+# --- multi-source fetch ------------------------------------------------------
+
+def test_streaming_fetches_from_multiple_hosts(tmp_path):
+    """Against a sharded store the fetcher reads per-placement sources,
+    not the backend's serialized get_blob: the per-source byte counters
+    show more than one host serving."""
+    be = ShardedBackend(str(tmp_path), n_hosts=3, replicate=True)
+    mgr = _save_chain(be, steps=2)
+    eager = mgr.restore(2)
+    streamed = mgr.restore(2, streaming=True)
+    _assert_same_entries(eager, streamed)
+    served = streamed.streamer.timings()["fetch_bytes_per_source"]
+    assert len(served) >= 2, f"single-source fetch: {served}"
+
+
+# --- workers= threads through the public API --------------------------------
+
+def test_session_threads_workers_and_streaming(tmp_path, monkeypatch):
+    import repro.core.checkpoint as ckpt
+    seen = {}
+    orig = ckpt.CheckpointManager.restore
+
+    def spy(self, *a, **kw):
+        seen.update(kw)
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(ckpt.CheckpointManager, "restore", spy)
+    with CheckpointSession(f"localfs:{tmp_path}",
+                           Policy(streaming_restore=True)) as sess:
+        app = sess.attach(_TinyOpt())
+        app.step()
+        sess.snapshot(block=True)
+        del app
+        app2 = sess.restore("latest", workers=3)
+    assert seen["workers"] == 3
+    assert seen["streaming"] is True      # policy default applied
+    assert app2.n == 1
+
+    with CheckpointSession(f"localfs:{tmp_path}", Policy()) as sess:
+        seen.clear()
+        app3 = sess.restore("latest", decode_workers=2, streaming=False)
+        assert app3.n == 1
+        assert seen["workers"] == 2       # alias folds into workers
+        assert not seen.get("streaming", False)
+        with pytest.raises(PolicyError, match="same knob"):
+            sess.restore("latest", workers=1, decode_workers=4)
+
+
+class _TinyOpt:
+    """Protocol citizen with a cold-tier entry (opt_state)."""
+    kind = "tinyopt"
+
+    def __init__(self):
+        self.x = np.zeros(8, np.float64)
+        self.m = np.zeros(8, np.float64)
+        self.n = 0
+
+    def step(self):
+        self.x += 1.0
+        self.m = 0.9 * self.m + self.x
+        self.n += 1
+
+    def checkpoint_state(self):
+        up = UpperHalf()
+        up.register("x", "params", self.x.copy())
+        up.register("opt_state", "opt_state", {"m": self.m.copy()})
+        up.register("n", "step", np.int64(self.n))
+        return up
+
+    def checkpoint_step(self):
+        return self.n
+
+    def job_meta(self):
+        return {"kind": self.kind}
+
+    def bind(self, restore):
+        self.x = np.asarray(restore.tree("x"), np.float64).copy()
+        self.m = np.asarray(restore.tree("opt_state")["m"],
+                            np.float64).copy()
+        self.n = int(restore.scalar("n"))
+        restore.release()
+
+
+@register_app_kind("tinyopt")
+def _restore_tinyopt(restore):
+    app = _TinyOpt()
+    app.bind(restore)
+    return app
+
+
+def test_policy_validation():
+    p = Policy(streaming_restore=True, lazy_kinds=["cache"])
+    assert p.lazy_kinds == ("cache",)     # coerced to tuple
+    with pytest.raises(PolicyError, match="streaming_restore"):
+        Policy(lazy_kinds=("opt_state",))
+    with pytest.raises(PolicyError):
+        Policy(streaming_restore=True, lazy_kinds="opt_state")
+
+
+# --- the cached: tier --------------------------------------------------------
+
+def test_parse_store_spec_nested_over():
+    scheme, path, params = parse_store_spec(
+        "cached:/ssd/cache?over=sharded:/remote?hosts=4&replicate=1")
+    assert (scheme, path) == ("cached", "/ssd/cache")
+    # everything after over= belongs to the inner spec, verbatim
+    assert params == {"over": "sharded:/remote?hosts=4&replicate=1"}
+
+
+def test_cached_needs_over():
+    with pytest.raises(PolicyError, match="cached"):
+        resolve_backend("cached:/tmp/nowhere")
+
+
+def test_cached_warms_then_serves_locally(tmp_path):
+    """First restore reads through (misses, warms); second restore is
+    served from the cache — the inner store sees no blob reads."""
+    remote = tmp_path / "remote"
+    cache = tmp_path / "cache"
+    _save_chain(LocalFSBackend(str(remote)), steps=1)
+
+    spec = f"cached:{cache}?over=localfs:{remote}"
+    cb = resolve_backend(spec)
+    assert isinstance(cb, CachedBackend)
+    mgr = CheckpointManager(cb, async_save=False)
+    first = mgr.restore(1, streaming=True)
+    first.streamer.wait_all()        # cold tier warmed too
+    assert cb.stats["warmed"] > 0 and cb.stats["hits"] == 0
+
+    class _Dead:
+        def get_blob(self, name):
+            raise AssertionError(f"cache miss leaked to remote: {name}")
+
+        def __getattr__(self, attr):
+            return getattr(cb.inner, attr)
+
+    cb2 = CachedBackend(str(cache), _Dead())
+    second = CheckpointManager(cb2, async_save=False).restore(
+        1, streaming=True)
+    _assert_same_entries(first, second)
+    assert cb2.stats["hits"] > 0 and cb2.stats["misses"] == 0
+    served = second.streamer.timings()["fetch_bytes_per_source"]
+    assert set(served) == {"cache"}
+
+
+def test_cached_writes_through(tmp_path):
+    """Snapshots taken through the cached front land durably in the
+    inner store (cache loss must never lose data)."""
+    spec = (f"cached:{tmp_path / 'c'}?over=sharded:{tmp_path / 'r'}"
+            "?hosts=2&replicate=1")
+    cb = resolve_backend(spec)
+    mgr = CheckpointManager(cb, async_save=False)
+    mgr.save(1, _upper(9), OpLog())
+    # the inner store alone can serve the checkpoint
+    inner_only = CheckpointManager(cb.inner, async_save=False)
+    got = inner_only.restore(1)
+    np.testing.assert_array_equal(
+        np.asarray(got.entries["step"][""]), np.int64(9))
