@@ -33,12 +33,17 @@ __all__ = [
     # state declaration (re-exports: apps never import repro.core)
     "UpperHalf",
     "OpLog",
+    # fleet migration (re-exports: the session's migrate() verb returns
+    # a MoveResult; FleetRouter routes + moves over many engines)
+    "FleetRouter",
+    "MoveResult",
     # typed errors
     "CheckpointError",
     "PolicyError",
     "BackendUnavailable",
     "SnapshotError",
     "RestoreError",
+    "MigrationError",
     "StaleHandleError",
     "LifecycleError",
     "SupervisorError",
@@ -60,11 +65,14 @@ _HOMES = {
     "available_codecs": "repro.api.registry",
     "UpperHalf": "repro.core.split_state",
     "OpLog": "repro.core.oplog",
+    "FleetRouter": "repro.core.migration",
+    "MoveResult": "repro.core.migration",
     "CheckpointError": "repro.api.errors",
     "PolicyError": "repro.api.errors",
     "BackendUnavailable": "repro.api.errors",
     "SnapshotError": "repro.api.errors",
     "RestoreError": "repro.api.errors",
+    "MigrationError": "repro.api.errors",
     "StaleHandleError": "repro.api.errors",
     "LifecycleError": "repro.api.errors",
     "SupervisorError": "repro.api.errors",

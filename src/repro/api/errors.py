@@ -14,6 +14,7 @@ hierarchy adds ways to catch, it never removes one.
     ├── BackendUnavailable   (RuntimeError) storage cannot serve a commit
     ├── SnapshotError        (RuntimeError) capture/encode pipeline failure
     ├── RestoreError         (ValueError)   checkpoint cannot be decoded
+    ├── MigrationError       (RuntimeError) planned move cannot execute
     ├── LifecycleError       (RuntimeError) Incarnation phase out of order
     └── SupervisorError      (RuntimeError) failure loop cannot execute
 
@@ -46,6 +47,12 @@ class SnapshotError(CheckpointError, RuntimeError):
 class RestoreError(CheckpointError, ValueError):
     """A committed checkpoint could not be decoded or rematerialized
     (unknown manifest format, broken delta chain, missing metadata)."""
+
+
+class MigrationError(CheckpointError, RuntimeError):
+    """A planned live move cannot execute: source/target is not a
+    serving-style engine, an unknown engine name, or a routing state
+    that would drop requests."""
 
 
 # Re-exported members defined in their home modules (they are raised

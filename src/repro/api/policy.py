@@ -54,6 +54,16 @@ class Policy:
     ``lazy_kinds`` entry kinds the streaming restore defers to the cold
                    tier (None = the streaming default: optimizer
                    moments + KV cache).
+    ``drain_deadline_s`` planned-move budget: the worst per-batch
+                   blackout a ``CheckpointSession.migrate`` /
+                   ``FleetRouter`` drain may cost before the move is
+                   flagged ``within_deadline=False`` (None = no
+                   deadline; moves are never aborted mid-flight — a
+                   half-moved fleet is worse than a late one).
+    ``migrate_batch`` sessions frozen per move batch: bounds any one
+                   session's blackout — the rest keep decoding on the
+                   source while a batch is in transit (None = move all
+                   chosen sessions in one batch).
     """
 
     interval: Optional[int] = None
@@ -71,6 +81,8 @@ class Policy:
     codecs: Mapping[str, str] = field(default_factory=dict)
     streaming_restore: bool = False
     lazy_kinds: Optional[tuple] = None
+    drain_deadline_s: Optional[float] = None
+    migrate_batch: Optional[int] = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "codecs", dict(self.codecs))
@@ -121,6 +133,16 @@ class Policy:
                     "under a streaming restore — enable it or drop the "
                     "knob (a per-call restore(streaming=True) uses the "
                     "streaming default tiers)")
+        if self.drain_deadline_s is not None and self.drain_deadline_s <= 0:
+            raise PolicyError(
+                f"drain_deadline_s={self.drain_deadline_s}: the planned-"
+                "move blackout budget must be > 0 seconds, or None for "
+                "no deadline")
+        if self.migrate_batch is not None and self.migrate_batch < 1:
+            raise PolicyError(
+                f"migrate_batch={self.migrate_batch}: a move batch "
+                "freezes at least one session, or None to move all "
+                "chosen sessions in one batch")
         if self.codecs:
             from repro.api.registry import available_codecs
             known = available_codecs()

@@ -204,6 +204,53 @@ class CheckpointSession:
                              lazy_kinds=self.policy.lazy_kinds)
         return self.attach(binder(ctx, **app_kwargs))
 
+    # --- live migration ------------------------------------------------
+
+    def migrate(self, to: Any, *, slots: Optional[List[int]] = None,
+                include_queue: bool = False,
+                via: Optional[str] = None,
+                batch: Optional[int] = None,
+                deadline_s: Optional[float] = None,
+                streaming: bool = True):
+        """Live-migrate this session's serving app's sessions onto
+        another engine, through the C/R protocol: the chosen slots
+        freeze, snapshot as a ``SessionBundle`` on a *move channel* (a
+        dedicated store beside this session's chain — migration traffic
+        never interleaves with the periodic snapshot chain), restore,
+        and re-enter the target through admission replay — the re-slot
+        machinery, so an N-slot engine's sessions land on an M-slot
+        engine token-identically. The source keeps serving its
+        unaffected slots throughout.
+
+        ``to`` is the target engine (or a session holding one).
+        ``via`` overrides the move-channel store spec (default: a
+        ``_moves/`` directory under this session's store root).
+        ``batch`` / ``deadline_s`` default to ``policy.migrate_batch`` /
+        ``policy.drain_deadline_s``. Returns a ``MoveResult`` with
+        per-batch blackout accounting."""
+        from repro.api.errors import MigrationError
+        from repro.core.migration import migrate_sessions
+
+        source = self._require_app()
+        target = to.app if isinstance(to, CheckpointSession) else to
+        if target is None:
+            raise MigrationError("target session has no app attached")
+        if via is None:
+            root = getattr(self.backend, "root", None)
+            if root is None:
+                raise MigrationError(
+                    f"{type(self.backend).__name__} store has no root "
+                    "path to derive a move channel from; pass via= (a "
+                    "store spec for the migration transport)")
+            via = f"localfs:{root}"
+        return migrate_sessions(
+            source, target, via=via, slots=slots,
+            include_queue=include_queue,
+            batch=batch if batch is not None else self.policy.migrate_batch,
+            deadline_s=deadline_s if deadline_s is not None
+            else self.policy.drain_deadline_s,
+            streaming=streaming)
+
     # --- supervision ---------------------------------------------------
 
     def supervise(self, hosts: List[int], *,

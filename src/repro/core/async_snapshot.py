@@ -878,15 +878,33 @@ def manifest_chain_steps(backend: CheckpointBackend, step: int) -> List[int]:
     return chain
 
 
-def _decode_chain_leaf(manifests: List[Dict[str, Any]], backend,
-                       name: str, path: str) -> np.ndarray:
-    """Decode one leaf of the final manifest: walk base links back only
-    as far as its run of xor modes reaches (a full or codec leaf needs
-    no predecessor), then decode forward, XOR-applying each link."""
+def leaf_chain_start(manifests: List[Dict[str, Any]], name: str,
+                     path: str) -> int:
+    """Index of the manifest where ``(name, path)``'s decode run starts:
+    walk base links back only as far as its run of xor modes reaches (a
+    full or codec leaf needs no predecessor). An entry or leaf first
+    introduced mid-chain bounds the walk — the predecessor manifest
+    simply doesn't carry it — so the run starts at the introduction
+    instead of raising KeyError. Every manifest in ``[start:]`` is
+    guaranteed to carry the leaf; this is the single definition of a
+    leaf's chain shared by the eager decoder and the streaming planner
+    (which is what makes their blob plans identical by construction)."""
     i = len(manifests) - 1
     while i > 0 and (manifests[i]["entries"][name]["leaves"][path]
                      .get("mode") == "xor"):
+        prev = manifests[i - 1]["entries"].get(name, {}) \
+            .get("leaves", {}).get(path)
+        if prev is None:
+            break   # first introduced here: nothing earlier to walk to
         i -= 1  # xor decodes against the predecessor's value
+    return i
+
+
+def _decode_chain_leaf(manifests: List[Dict[str, Any]], backend,
+                       name: str, path: str) -> np.ndarray:
+    """Decode one leaf of the final manifest from the start of its xor
+    run (``leaf_chain_start``) forward, XOR-applying each link."""
+    i = leaf_chain_start(manifests, name, path)
     val: Optional[np.ndarray] = None
     for m in manifests[i:]:
         val = deltamod.decode_leaf(

@@ -29,6 +29,10 @@ class FailureAction(Enum):
     RESTART_LAST_CKPT = "restart_last_ckpt"
     HOT_SPARE = "hot_spare"
     SHRINK = "shrink"
+    # not a failure: an operator-initiated drain/move of a healthy host
+    # (maintenance, defrag). Decided by ClusterSupervisor.planned_move,
+    # never by FailurePolicy — nothing is dead.
+    PLANNED_MOVE = "planned_move"
 
 
 @dataclass

@@ -49,6 +49,7 @@ import numpy as np
 from repro.api.errors import RestoreError
 from repro.core import delta as deltamod
 from repro.core.async_snapshot import (_decode_chain_leaf,
+                                       leaf_chain_start,
                                        manifest_chain_steps)
 from repro.core.backends.base import CheckpointBackend
 
@@ -168,12 +169,11 @@ class StreamingMaterializer:
                 self._futures[key] = Future()
                 (self._cold_keys if cold else self._hot_keys).append(key)
                 blobs: List[str] = []
-                # same run-start walk as the eager decoder: a leaf's
-                # chain reaches back only as far as its xor modes do
-                i = len(self.manifests) - 1
-                while i > 0 and (self.manifests[i]["entries"][name]
-                                 ["leaves"][path].get("mode") == "xor"):
-                    i -= 1
+                # THE run-start walk of the eager decoder — shared, so
+                # the planner's blob set is the decode's blob set by
+                # construction (an entry or leaf first introduced
+                # mid-chain bounds the walk instead of KeyError-ing)
+                i = leaf_chain_start(self.manifests, name, path)
                 for m in self.manifests[i:]:
                     blobs.extend(deltamod.leaf_blob_names(
                         m["entries"][name]["leaves"][path]))
@@ -335,7 +335,12 @@ class StreamingMaterializer:
     def _blob_done(self, name: str, label: str, data: bytes) -> None:
         ready: List[_LeafKey] = []
         with self._lock:
-            self._blobs[name] = data
+            # a blob whose every owning leaf already resolved (e.g. the
+            # leaves failed while this read was in flight) has no one
+            # left to decode it: keeping the bytes would leak them until
+            # the materializer dies
+            if self._blob_refs.get(name, 0) > 0:
+                self._blobs[name] = data
             self._in_flight.discard(name)
             sb = self.stats["source_bytes"]
             sb[label] = sb.get(label, 0) + len(data)
@@ -401,16 +406,30 @@ class StreamingMaterializer:
                 if n <= 0:
                     self._blob_refs.pop(b, None)
                     self._blobs.pop(b, None)
+                    self._blob_waiters.pop(b, None)
+                    # ownerless and never fetched (this leaf failed
+                    # before its blobs landed): drop the queue entry so
+                    # the fetch workers don't read bytes nobody wants
+                    if b in self._queued:
+                        self._queue.remove(b)
+                        self._queued.discard(b)
                 else:
                     self._blob_refs[b] = n
+            if not self._queue and not self._in_flight \
+                    and self._fetch_end is None:
+                self._fetch_end = time.monotonic()
             self._leaf_pending.pop(key, None)
             self._leaves_left -= 1
             done = self._leaves_left == 0
             if key in self._hot_set:
                 self._hot_left -= 1
-                hot = self._hot_left == 0
+                if self._hot_left == 0 and self._hot_ready_s is None:
+                    # first writer wins; hot_result()'s fallback (for a
+                    # hot tier that was empty at plan time) takes the
+                    # same lock and honours the same None check
+                    self._hot_ready_s = time.monotonic() - self._t0
+                    hot = True
         if hot:
-            self._hot_ready_s = time.monotonic() - self._t0
             self._hot_done.set()
         if done:
             self._shutdown_pools()
@@ -477,8 +496,9 @@ class StreamingMaterializer:
         streaming behind them. Same key set as the eager materializer,
         including leafless entries (e.g. an empty request queue)."""
         self.wait_hot()
-        if self._hot_ready_s is None:
-            self._hot_ready_s = time.monotonic() - self._t0
+        with self._lock:
+            if self._hot_ready_s is None:   # empty hot tier: first
+                self._hot_ready_s = time.monotonic() - self._t0
         entries: Dict[str, Any] = {}
         for name, path in self._hot_keys:
             entries.setdefault(name, {})[path] = \
@@ -515,8 +535,8 @@ class StreamingMaterializer:
                 "hot_leaves": self.stats["hot_leaves"],
                 "cold_leaves": self.stats["cold_leaves"],
             }
-        if self._hot_ready_s is not None:
-            out["hot_ready_s"] = self._hot_ready_s
+            if self._hot_ready_s is not None:
+                out["hot_ready_s"] = self._hot_ready_s
         out["fetch_bytes_per_source"] = src
         if fetch_s > 0:
             out["fetch_mb_s_per_source"] = {

@@ -246,6 +246,83 @@ class ClusterSupervisor:
                                reason="straggler", hosts=slow)
         return slow
 
+    def planned_move(self, host: int, to: Optional[int] = None, *,
+                     rebuild: bool = False) -> RestoreTarget:
+        """Proactively drain a HEALTHY host — the maintenance twin of the
+        failure loop, sharing its machinery instead of reinventing it.
+
+        With a landing host (``to``, defaulting to the first spare) the
+        move is the hot-spare sequence minus the death: quiesce, repair,
+        rebind the host's logical coordinate to the target — the vid
+        stays stable, so shard ownership and the heartbeat world follow
+        — and return the *drained* host to the spare pool (it is
+        healthy; a later failure may consume it). ``rebuild=True``
+        additionally tears the runner down and rebuilds it through the
+        restore hook on the new world (for runners that pin physical
+        resources the remap alone can't move).
+
+        With no landing host available the world shrinks on purpose:
+        the drained host leaves, and the runner rebuilds on the
+        survivors through the same ``_recover`` path a SHRINK decision
+        uses — which requires a restorable checkpoint, exactly like a
+        real shrink."""
+        logical = self.hostmap.logical_of(host)
+        if logical is None:
+            raise SupervisorError(
+                f"host {host} is not part of this job's world "
+                f"({self.hostmap.physical_hosts()}); nothing to drain")
+        if to is None and self.policy.spares:
+            to = self.policy.spares[0]
+        if to is not None and to in self.world:
+            raise SupervisorError(
+                f"target {to} already serves this job; a planned move "
+                "needs an idle landing host (or None to shrink)")
+        t0, w0 = self.clock(), time.monotonic()
+        if to is not None:
+            self._quiesce()
+            self._repair()
+            self.hostmap.remap(logical, to)
+            self.monitor.hosts.pop(host, None)
+            self.monitor.hosts[to] = HostState(last_heartbeat=self.clock())
+            if to in self.policy.spares:
+                self.policy.spares.remove(to)
+            self.policy.spares.append(host)   # drained, not dead: reusable
+            self._event("planned_move", host=host, to=to, logical=logical)
+            hosts = self.world
+            assignment = None
+            if self.n_shards is not None:
+                assignment = self._apply_assignment(
+                    rebalance_shards(self.n_shards, hosts),
+                    reason="planned_move", hosts=[to])
+            target = RestoreTarget(FailureAction.PLANNED_MOVE, step=None,
+                                   hosts=hosts, mapping={host: to},
+                                   assignment=assignment)
+            if rebuild:
+                self._recover(target)
+            else:
+                self._reset_heartbeats()
+            action = "planned_move"
+        else:
+            survivors = [h for h in self.world if h != host]
+            if not survivors:
+                raise SupervisorError(
+                    f"draining host {host} would empty the world; give "
+                    "the job a spare to land on first")
+            self.hostmap.unbind(logical)
+            self.monitor.hosts.pop(host, None)
+            assignment = (tuple(rebalance_shards(self.n_shards, survivors))
+                          if self.n_shards is not None else None)
+            target = RestoreTarget(FailureAction.PLANNED_MOVE, step=None,
+                                   hosts=survivors, assignment=assignment)
+            self._recover(target)
+            self._event("restored", action="planned_drain",
+                        step=target.step, hosts=survivors)
+            action = "planned_drain"
+        self.incidents.append(Incident(
+            action=action, dead=[], step=target.step,
+            mttr_s=self.clock() - t0, wall_s=time.monotonic() - w0))
+        return target
+
     # --- decision execution ---------------------------------------------
 
     def _do_hot_spare(self, dead: List[int],

@@ -28,6 +28,7 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+from typing import Optional
 
 import jax
 import numpy as np
@@ -37,7 +38,7 @@ from repro.launch.common import (add_store_args, build_session,
                                  parse_resume_arg, resolve_store,
                                  restore_timings_line, validate_resume)
 from repro.launch.supervise import (SimWorldDriver, add_supervise_args,
-                                    parse_supervise_args)
+                                    parse_drain_arg, parse_supervise_args)
 from repro.models import model as M
 from repro.serving.engine import Request, ServingEngine
 
@@ -51,12 +52,26 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=5)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--migrate-to", default=None, metavar="SLOTS@STEP",
+                    help="live migration: at engine step STEP, move every "
+                         "live session onto a fresh SLOTS-slot engine "
+                         "through the C/R move channel and finish there "
+                         "(needs --store; sessions continue "
+                         "token-identically)")
     add_store_args(ap, interval_flag="--snapshot-every",
                    interval_default=4, interval_unit="engine steps")
     add_supervise_args(ap, unit="engine step")
     args = ap.parse_args(argv)
 
     kill, err = parse_supervise_args(args, "serve")
+    if err is not None:
+        print(err, file=sys.stderr)
+        return 2
+    drain, err = parse_drain_arg(args, "serve")
+    if err is not None:
+        print(err, file=sys.stderr)
+        return 2
+    migrate_to, err = _parse_migrate_to(args, "serve")
     if err is not None:
         print(err, file=sys.stderr)
         return 2
@@ -67,6 +82,15 @@ def main(argv=None) -> int:
     if args.supervise and not spec:
         print("[serve] --supervise needs --store/--ckpt-dir (restarts "
               "resume from snapshots)", file=sys.stderr)
+        return 2
+    if migrate_to is not None and not spec:
+        print("[serve] --migrate-to needs --store/--ckpt-dir (the move "
+              "channel rides beside the store)", file=sys.stderr)
+        return 2
+    if migrate_to is not None and args.supervise:
+        print("[serve] --migrate-to and --supervise would both own the "
+              "engine swap; use --drain H@STEP for a supervised planned "
+              "move", file=sys.stderr)
         return 2
 
     # validate the cheap stuff before paying jax init + param build
@@ -137,7 +161,10 @@ def main(argv=None) -> int:
     already = sum(len(r.out) for r in reqs)
     t0 = time.monotonic()
     if args.supervise:
-        eng, reg = _run_supervised(args, sess, eng, params, kill)
+        eng, reg = _run_supervised(args, sess, eng, params, kill, drain)
+        reqs = sorted(reg.values(), key=lambda r: r.rid)
+    elif migrate_to is not None:
+        eng, reg = _run_migrated(args, sess, eng, migrate_to)
         reqs = sorted(reg.values(), key=lambda r: r.rid)
     else:
         eng.run_until_drained(
@@ -153,7 +180,61 @@ def main(argv=None) -> int:
     return 0
 
 
-def _run_supervised(args, sess, eng, params, kill, max_steps: int = 10_000):
+def _parse_migrate_to(args, prog: str):
+    if args.migrate_to is None:
+        return None, None
+    try:
+        s, at = args.migrate_to.split("@")
+        mt = (int(s), int(at))
+    except ValueError:
+        return None, (f"[{prog}] --migrate-to: expected SLOTS@STEP, got "
+                      f"{args.migrate_to!r}")
+    if mt[0] < 1:
+        return None, (f"[{prog}] --migrate-to: SLOTS must be >= 1, got "
+                      f"{mt[0]}")
+    return mt, None
+
+
+def _run_migrated(args, sess, eng, migrate_to, max_steps: int = 10_000):
+    """Drain with one live move in the middle: at engine step STEP,
+    every live session freezes, snapshots through the move channel and
+    re-enters a fresh SLOTS-slot engine via admission replay — then the
+    drain finishes there. Returns the final engine and the newest
+    Request object per rid (the landed objects are the authoritative
+    ones after a move)."""
+    n_slots, at = migrate_to
+    reg = {r.rid: r for r in eng.live_requests()}
+
+    def drain(until: Optional[int]) -> int:
+        nonlocal max_steps
+        while (eng.queue or any(eng.slot_req)) and max_steps > 0 \
+                and (until is None or eng.steps < until):
+            eng.step()
+            sess.maybe_snapshot()
+            max_steps -= 1
+        return max_steps
+
+    drain(at)
+    if eng.queue or any(eng.slot_req):
+        target = ServingEngine.create(
+            args.arch, eng.params, (len(jax.devices()), 1),
+            n_slots=n_slots, max_seq=args.max_seq)
+        res = sess.migrate(target, include_queue=True)
+        print(f"[serve] migrated {len(res.moved)} sessions -> "
+              f"{n_slots}-slot engine at step {eng.steps} (blackout "
+              f"{res.blackout_s * 1e3:.0f}ms: capture "
+              f"{res.capture_s * 1e3:.0f}ms + restore "
+              f"{res.restore_s * 1e3:.0f}ms + first step)")
+        eng = sess.attach(target)   # the session follows its sessions
+        for r in eng.live_requests():
+            reg[r.rid] = r
+        drain(None)
+    sess.wait()
+    return eng, reg
+
+
+def _run_supervised(args, sess, eng, params, kill, drain=None,
+                    max_steps: int = 10_000):
     """Drain the engine under the failure loop: one virtual-clock tick
     per engine step; a detected death swaps the engine under us through
     the session's app-kind registry (shrink restores the live sessions
@@ -163,7 +244,7 @@ def _run_supervised(args, sess, eng, params, kill, max_steps: int = 10_000):
     authoritative output."""
     world = list(range(args.hosts))
     spares = list(range(args.hosts, args.hosts + args.spares))
-    driver = SimWorldDriver(kill)
+    driver = SimWorldDriver(kill, drain)
 
     def restore_kwargs(target):
         # ceiling division: losing 1 of 4 hosts must not halve a

@@ -40,6 +40,11 @@ def add_supervise_args(ap: argparse.ArgumentParser,
     ap.add_argument("--kill-host", default=None, metavar="H@STEP",
                     help=f"fault injection: host H stops heartbeating "
                          f"at {unit} STEP (needs --supervise)")
+    ap.add_argument("--drain", default=None, metavar="H@STEP",
+                    help=f"planned move: at {unit} STEP, drain healthy "
+                         "host H onto a spare (or shrink the world if "
+                         "none) via supervisor.planned_move (needs "
+                         "--supervise)")
 
 
 def parse_supervise_args(args, prog: str
@@ -52,10 +57,12 @@ def parse_supervise_args(args, prog: str
     if not args.supervise and (args.kill_host is not None or args.spares
                                or args.no_shrink
                                or args.hosts is not None
-                               or args.heartbeat_timeout is not None):
+                               or args.heartbeat_timeout is not None
+                               or getattr(args, "drain", None) is not None):
         return None, (f"[{prog}] --hosts/--spares/--heartbeat-timeout/"
-                      "--no-shrink/--kill-host only make sense under "
-                      "--supervise (nothing would watch the heartbeats)")
+                      "--no-shrink/--kill-host/--drain only make sense "
+                      "under --supervise (nothing would watch the "
+                      "heartbeats)")
     if args.hosts is None:
         args.hosts = 2
     if args.heartbeat_timeout is None:
@@ -76,6 +83,30 @@ def parse_supervise_args(args, prog: str
     return kill, None
 
 
+def parse_drain_arg(args, prog: str
+                    ) -> Tuple[Optional[Tuple[int, int]], Optional[str]]:
+    """-> (drain, error): the parsed --drain (host, step) planned-move
+    trigger, validated like --kill-host. Call AFTER
+    ``parse_supervise_args`` (it fills the --hosts default)."""
+    spec = getattr(args, "drain", None)
+    if spec is None:
+        return None, None
+    try:
+        h, s = spec.split("@")
+        drain = (int(h), int(s))
+    except ValueError:
+        return None, (f"[{prog}] --drain: expected H@STEP, got {spec!r}")
+    if not 0 <= drain[0] < args.hosts:
+        return None, (f"[{prog}] --drain: host {drain[0]} is not in "
+                      f"the simulated world 0..{args.hosts - 1}")
+    if args.kill_host is not None and drain[0] == int(
+            args.kill_host.split("@")[0]):
+        return None, (f"[{prog}] --drain and --kill-host target the same "
+                      f"host {drain[0]}; a drained host has already left "
+                      "the world — pick different hosts")
+    return drain, None
+
+
 class SimWorldDriver:
     """The simulated world around a supervised run: one virtual-clock
     tick per step, every live host heartbeats (the injected kill stays
@@ -83,8 +114,10 @@ class SimWorldDriver:
     driver first, hand ``driver.clock`` to the ClusterSupervisor, then
     ``attach`` it."""
 
-    def __init__(self, kill: Optional[Tuple[int, int]]) -> None:
+    def __init__(self, kill: Optional[Tuple[int, int]],
+                 drain: Optional[Tuple[int, int]] = None) -> None:
         self.kill = kill
+        self.drain = drain
         self.sup = None
         self._t = 0.0
 
@@ -111,6 +144,13 @@ class SimWorldDriver:
                   f"{target.dead} -> hosts={target.hosts} "
                   f"(mttr {self.sup.incidents[-1].wall_s:.2f}s)")
             self.kill = None
+        if self.drain is not None and step >= self.drain[1]:
+            host, self.drain = self.drain[0], None
+            moved = self.sup.planned_move(host)
+            inc = self.sup.incidents[-1]
+            print(f"[supervisor] {inc.action}: host {host} -> hosts="
+                  f"{moved.hosts} (blackout {inc.wall_s:.2f}s)")
+            return moved if target is None else target
         return target
 
     def warn_if_kill_pending(self) -> None:
@@ -124,3 +164,7 @@ class SimWorldDriver:
                   f"incident — the run ended before the death could be "
                   f"detected (raise --steps or lower "
                   f"--heartbeat-timeout)", file=sys.stderr)
+        if self.drain is not None:
+            print(f"[supervisor] WARNING: --drain "
+                  f"{self.drain[0]}@{self.drain[1]} never ran — the run "
+                  f"ended before the trigger step", file=sys.stderr)

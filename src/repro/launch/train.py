@@ -41,7 +41,7 @@ from repro.launch.common import (add_store_args, build_session,
                                  parse_resume_arg, resolve_store,
                                  restore_timings_line, validate_resume)
 from repro.launch.supervise import (SimWorldDriver, add_supervise_args,
-                                    parse_supervise_args)
+                                    parse_drain_arg, parse_supervise_args)
 from repro.train.loop import Trainer, TrainJob
 
 
@@ -61,6 +61,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     kill, err = parse_supervise_args(args, "launch")
+    if err is not None:
+        print(err, file=sys.stderr)
+        return 2
+    drain, err = parse_drain_arg(args, "launch")
     if err is not None:
         print(err, file=sys.stderr)
         return 2
@@ -108,7 +112,7 @@ def main(argv=None) -> int:
               f"({d},{args.model_mesh})")
 
     if args.supervise:
-        tr = _run_supervised(args, sess, tr, kill)
+        tr = _run_supervised(args, sess, tr, kill, drain)
     else:
         for step in range(tr.checkpoint_step(), args.steps):
             m = tr.train_steps(1)
@@ -121,15 +125,18 @@ def main(argv=None) -> int:
     return 0
 
 
-def _run_supervised(args, sess, tr, kill):
+def _run_supervised(args, sess, tr, kill, drain=None):
     """The failure loop around the step loop: every step is one tick of
     the simulated world's clock; live hosts heartbeat, the supervisor
     polls, and an executed decision swaps the runner under us — the
     restore goes back through the session's app-kind registry, so the
-    supervisor never touches trainer-specific code."""
+    supervisor never touches trainer-specific code. A --drain trigger
+    runs the same loop's *planned* twin: ``supervisor.planned_move``
+    rebinds the healthy host's role to a spare (or shrinks on purpose)
+    without anything having died."""
     world = list(range(args.hosts))
     spares = list(range(args.hosts, args.hosts + args.spares))
-    driver = SimWorldDriver(kill)
+    driver = SimWorldDriver(kill, drain)
 
     def on_restored(t, target):
         print(f"[supervisor] restored at step "

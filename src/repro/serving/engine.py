@@ -422,6 +422,37 @@ class ServingEngine:
         """In-flight requests (slot order) + the waiting queue."""
         return [r for r in self.slot_req if r is not None] + list(self.queue)
 
+    def extract_sessions(self, slots: Optional[List[int]] = None, *,
+                         include_queue: bool = False) -> List[Request]:
+        """Freeze and REMOVE live sessions — the migration source hook.
+
+        The chosen ``slots`` (None = every occupied slot) give up their
+        requests; each request carries its complete history (prompt +
+        generated tokens + budget), which is all a target engine needs
+        to rebuild the session's KV state through admission replay — KV
+        bytes never travel. The freed slots zero their bookkeeping and
+        refill from the queue on the next step; the decode loop never
+        stops, so unaffected slots keep generating throughout a move.
+        ``include_queue`` also drains the waiting queue (a full drain
+        of this engine)."""
+        chosen = range(self.n_slots) if slots is None else slots
+        out: List[Request] = []
+        for s in chosen:
+            if not 0 <= s < self.n_slots:
+                raise IndexError(f"slot {s} out of range "
+                                 f"(engine has {self.n_slots})")
+            r = self.slot_req[s]
+            if r is None:
+                continue
+            out.append(r)
+            self.slot_req[s] = None
+            self.slot_pos[s] = 0
+            self.slot_tok[s, 0] = 0
+        if include_queue:
+            out.extend(self.queue)
+            self.queue = []
+        return out
+
     # --- admission ------------------------------------------------------
 
     def submit(self, req: Request) -> None:

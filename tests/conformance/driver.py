@@ -26,11 +26,15 @@ Failure modes:
 from __future__ import annotations
 
 import glob
+import hashlib
 import os
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.api import CheckpointSession, Policy, parse_store_spec
+import numpy as np
+
+from repro.api import (CheckpointSession, Policy, UpperHalf,
+                       parse_store_spec, register_app_kind)
 
 # --- family contract --------------------------------------------------------
 
@@ -250,6 +254,96 @@ def run_shrink(spec: FamilySpec, store: str) -> None:
         got = dr.digest(app2)
     assert got == want, \
         f"{spec.family}: post-shrink digest {got} != reference {want}"
+
+
+class _GrowingApp:
+    """Protocol citizen whose semantic state GROWS mid-run: a cold-tier
+    entry first exists at step 3, so inside a delta chain its first
+    appearance is a non-base manifest. Stands in for every app that
+    allocates state lazily — optimizer moments on the first update, a
+    serving engine's per-session tables."""
+    kind = "conformance-growing"
+
+    def __init__(self) -> None:
+        self.step = 0
+        self.base = np.zeros(64, np.float64)
+        self.late: Optional[np.ndarray] = None
+
+    def advance(self, n: int) -> None:
+        for _ in range(n):
+            self.step += 1
+            self.base += float(self.step)
+            if self.step >= 3:
+                z = self.late if self.late is not None \
+                    else np.full(32, 7.0)
+                self.late = z * 1.25 + self.step
+
+    def digest(self) -> str:
+        h = hashlib.sha256(self.base.tobytes())
+        if self.late is not None:
+            h.update(self.late.tobytes())
+        h.update(str(self.step).encode())
+        return h.hexdigest()
+
+    def checkpoint_state(self):
+        up = UpperHalf()
+        up.register("base", "params", {"b": self.base.copy()})
+        if self.late is not None:
+            up.register("late", "opt_state", {"z": self.late.copy()})
+        up.register("step", "step", np.int64(self.step))
+        return up
+
+    def checkpoint_step(self) -> int:
+        return self.step
+
+    def job_meta(self) -> Dict[str, Any]:
+        return {"kind": self.kind}
+
+    def bind(self, restore) -> None:
+        self.base = np.asarray(restore.tree("base")["b"],
+                               np.float64).copy()
+        self.late = (np.asarray(restore.tree("late")["z"],
+                                np.float64).copy()
+                     if restore.has("late") else None)
+        self.step = int(restore.scalar("step"))
+        restore.release()
+
+
+@register_app_kind(_GrowingApp.kind)
+def _restore_growing(restore) -> _GrowingApp:
+    app = _GrowingApp()
+    app.bind(restore)
+    return app
+
+
+def run_midchain(store: str) -> None:
+    """An entry first introduced mid-chain — its first appearance is a
+    non-base delta link — must checkpoint and restore bit-identically,
+    eager AND streaming, through the public API alone."""
+    ref = _GrowingApp()
+    ref.advance(6)
+    want = ref.digest()
+    with CheckpointSession(store, Policy(interval=1, chain=8,
+                                         keep_last=8)) as sess:
+        app = sess.attach(_GrowingApp())
+        for _ in range(4):
+            app.advance(1)
+            sess.maybe_snapshot()
+        sess.wait()
+        assert app.late is not None, \
+            "the late entry must exist before the kill for the cell " \
+            "to exercise a mid-chain introduction"
+        del app                                   # hard kill
+        for streaming in (False, True):
+            app2 = sess.restore("latest", streaming=streaming)
+            assert app2.step == 4, \
+                f"restored at step {app2.step}, wanted 4"
+            app2.advance(2)
+            got = app2.digest()
+            assert got == want, (
+                "mid-chain-new-entry: "
+                f"{'streaming' if streaming else 'eager'} digest {got} "
+                f"!= reference {want}")
 
 
 def tear_last_commit(store: str) -> int:

@@ -41,9 +41,15 @@ def fast_cells() -> List[Cell]:
     # must route around it. Degradation is a store property, not a
     # family property, so the full family×degraded product would be
     # redundant — one family stands in for all of them.
+    # two more targeted cells ride in the fast tier: degradation is a
+    # store property (one family stands in for all), and the mid-chain
+    # new-entry cell is a chain-shape property — an app whose semantic
+    # state grows mid-run, so an entry's first appearance is a non-base
+    # delta link that both restore schedules must handle
     return [Cell(f, m, _backend_for(m, "localfs"))
             for f in FAMILIES for m in MODES] \
-        + [Cell("attention", "degraded", "sharded")]
+        + [Cell("attention", "degraded", "sharded"),
+           Cell("dynamic-entry", "midchain", "localfs")]
 
 
 def slow_cells() -> List[Cell]:

@@ -24,6 +24,10 @@ def _store(backend: str, tmp_path, tag: str = "s") -> str:
 
 
 def _run(cell: matrix.Cell, tmp_path) -> None:
+    if cell.mode == "midchain":
+        # chain-shape cell: the driver's own growing app, no family
+        driver.run_midchain(_store(cell.backend, tmp_path))
+        return
     spec = families.get_spec(cell.family)
     if cell.mode == "swap":
         driver.run_swap(spec, _store("localfs", tmp_path, "a"),

@@ -1,0 +1,422 @@
+"""Live migration: session moves between engines through the C/R move
+channel — token identity, zero loss, source liveness, planned moves.
+
+The claims under test, end to end:
+  * a session moved mid-generation continues token-identically on the
+    target (including across an N-slot -> M-slot re-slot), with zero
+    dropped or duplicated responses under traffic;
+  * the source keeps serving its unaffected slots while a move runs;
+  * a move racing the source's periodic snapshot leaves the source's
+    delta chain intact (the move channel is a separate store);
+  * requests that arrive for a draining engine are held and replayed
+    on the target, exactly once;
+  * ``ClusterSupervisor.planned_move`` keeps the logical coordinate's
+    vid stable across the rebind and returns the drained host to the
+    spare pool.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import (CheckpointSession, FleetRouter, MigrationError,
+                       Policy, PolicyError, UpperHalf,
+                       register_app_kind)
+from repro.configs import get_smoke_config
+from repro.core.migration import SessionBundle, migrate_sessions
+from repro.core.supervisor import ClusterSupervisor, SupervisorError
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.traffic import TrafficGenerator
+
+ARCH = "phi4-mini-3.8b"
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_smoke_config(ARCH)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mesh11():
+    return jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def _engine(small_model, n_slots, max_seq=32, **kw):
+    cfg, params = small_model
+    return ServingEngine(cfg, params, _mesh11(), n_slots=n_slots,
+                         max_seq=max_seq, **kw)
+
+
+def _prompts(cfg, n, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(1, cfg.vocab_size,
+                        size=int(rng.randint(3, 8))).astype(np.int32)
+            for _ in range(n)]
+
+
+@pytest.fixture(scope="module")
+def reference_outs(small_model):
+    """Uninterrupted run of the shared prompt set on one engine — the
+    oracle every migrated run must match token-for-token."""
+    cfg, _ = small_model
+    eng = _engine(small_model, 3)
+    reqs = [Request(rid=i + 1, prompt=p, max_new=6)
+            for i, p in enumerate(_prompts(cfg, 4))]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained(max_steps=200)
+    return {r.rid: list(r.out) for r in reqs}
+
+
+# --- the bundle: migration's unit of state ------------------------------
+
+def test_session_bundle_roundtrips_requests(tmp_path):
+    reqs = [Request(rid=7, prompt=np.array([3, 5, 8], np.int32),
+                    max_new=9, out=[2, 4]),
+            Request(rid=9, prompt=np.array([1], np.int32), max_new=3)]
+    with CheckpointSession(f"localfs:{tmp_path}/chan",
+                           Policy(chain=1, async_save=False)) as chan:
+        chan.attach(SessionBundle(reqs, source_step=42))
+        chan.snapshot(block=True)
+        back = chan.restore("latest", expect_kind="serving-move")
+    assert back.source_step == 42
+    assert [(r.rid, r.max_new, list(r.prompt), r.out) for r in back.requests] \
+        == [(r.rid, r.max_new, list(r.prompt), r.out) for r in reqs]
+
+
+# --- token identity through a move --------------------------------------
+
+def test_midgeneration_move_is_token_identical(small_model, reference_outs,
+                                               tmp_path):
+    """3-slot source -> 2-slot target (re-slot), moved mid-generation:
+    every response matches the uninterrupted reference, nothing drops,
+    nothing duplicates, and the router's ownership follows the move."""
+    cfg, _ = small_model
+    router = FleetRouter({"a": _engine(small_model, 3),
+                          "b": _engine(small_model, 2)},
+                         via=f"localfs:{tmp_path}")
+    rids = [router.submit(p, 6, engine="a") for p in _prompts(cfg, 4)]
+    for _ in range(3):
+        router.step()         # mid-generation: partial outputs exist
+    assert any(router.inflight[r].out for r in rids)
+
+    res = router.migrate("a", "b", include_queue=True)
+    assert sorted(res.moved) == sorted(rids)
+    assert res.batches and res.blackout_s > 0
+    assert all(router.owner[r] == "b" for r in rids)
+    assert not router.engines["a"].live_requests()
+
+    for _ in range(100):
+        if not router.inflight:
+            break
+        router.step()
+    assert router.dropped() == []
+    assert router.duplicates == 0
+    got = {rid: list(router.completed[rid].out) for rid in rids}
+    assert got == reference_outs
+
+
+def test_migrate_batched_bounds_the_freeze(small_model, reference_outs,
+                                           tmp_path):
+    """batch=1 moves one session per round — per-batch blackouts are
+    recorded separately and the outcome is still token-identical."""
+    cfg, _ = small_model
+    router = FleetRouter({"a": _engine(small_model, 3),
+                          "b": _engine(small_model, 3)},
+                         via=f"localfs:{tmp_path}", migrate_batch=1)
+    rids = [router.submit(p, 6, engine="a") for p in _prompts(cfg, 4)]
+    for _ in range(2):
+        router.step()
+    res = router.migrate("a", "b", include_queue=True)
+    assert len(res.batches) == 3    # 3 occupied slots, one per batch
+    for _ in range(100):
+        if not router.inflight:
+            break
+        router.step()
+    assert router.dropped() == [] and router.duplicates == 0
+    assert {r: list(router.completed[r].out) for r in rids} \
+        == reference_outs
+
+
+# --- source liveness -----------------------------------------------------
+
+def test_source_serves_unaffected_slots_during_move(small_model):
+    """Extracting one slot never stops the other slots' decode."""
+    cfg, _ = small_model
+    eng = _engine(small_model, 2)
+    r0 = Request(rid=1, prompt=np.array([3, 5, 7], np.int32), max_new=20)
+    r1 = Request(rid=2, prompt=np.array([2, 4, 6], np.int32), max_new=20)
+    eng.submit(r0)
+    eng.submit(r1)
+    for _ in range(2):
+        eng.step()
+    s1 = eng.slot_req.index(r1)
+    frozen = eng.extract_sessions([1 - s1])
+    assert frozen == [r0]
+    assert eng.slot_req[1 - s1] is None
+    assert eng.slot_pos[1 - s1] == 0 and eng.slot_tok[1 - s1, 0] == 0
+
+    before = len(r1.out)
+    moved_out = list(r0.out)
+    eng.step()
+    assert len(r1.out) == before + 1     # the survivor kept decoding
+    assert r0.out == moved_out           # the frozen session did not
+
+
+def test_move_and_periodic_snapshot_share_the_engine(small_model,
+                                                     tmp_path):
+    """A move racing the source's periodic snapshot chain: the move
+    channel is a separate store, so the chain stays restorable and the
+    moved sessions are simply absent from the next snapshot."""
+    cfg, params = small_model
+    sess = CheckpointSession(f"localfs:{tmp_path}/src",
+                             Policy(interval=2, chain=3))
+    src = ServingEngine.create(f"{ARCH}-smoke", params, (1, 1),
+                               n_slots=2, max_seq=32,
+                               manager=sess.manager)
+    sess.attach(src)
+    dst = _engine(small_model, 2)
+    reqs = [Request(rid=i + 1, prompt=p, max_new=8)
+            for i, p in enumerate(_prompts(cfg, 3, seed=1))]
+    for r in reqs:
+        src.submit(r)
+    for _ in range(3):
+        src.step()
+        sess.maybe_snapshot()
+    sess.snapshot()                # async capture in flight...
+    res = sess.migrate(dst, slots=[0])   # ...races the move
+    assert len(res.moved) == 1
+    moved_rid = res.moved[0]
+    sess.wait()
+
+    # both sides drain; every request finishes exactly once
+    for _ in range(100):
+        if not (src.live_requests() or dst.live_requests()):
+            break
+        src.step()
+        dst.step()
+        sess.maybe_snapshot()
+    assert all(r.done for r in reqs if r.rid != moved_rid)
+    assert all(r.done for r in res.requests)
+
+    # the source's chain survived the race: it restores, without the
+    # moved session (it left before the next snapshot)
+    sess.wait()
+    eng2 = sess.restore("latest", expect_kind="serving", params=params,
+                        n_slots=2)
+    assert moved_rid not in [r.rid for r in eng2.live_requests()]
+
+
+# --- routing: held requests, accounting, validation ----------------------
+
+def test_requests_for_draining_engine_replay_on_target(small_model,
+                                                       tmp_path):
+    cfg, _ = small_model
+    router = FleetRouter({"a": _engine(small_model, 2),
+                          "b": _engine(small_model, 2)},
+                         via=f"localfs:{tmp_path}")
+    rid0 = router.submit(np.array([3, 5, 7], np.int32), 4, engine="a")
+    router.step()
+    router.drain("a", "b")
+    assert "a" in router.draining
+    # pinned to the draining engine -> held, not lost, not served there
+    rid1 = router.submit(np.array([2, 4], np.int32), 3, engine="a")
+    assert router.stats()["held"] == 1
+    # unpinned traffic routes around the draining engine
+    rid2 = router.submit(np.array([9, 9], np.int32), 3)
+    assert router.owner[rid2] == "b"
+
+    res = router.migrate("a", "b")       # cutover: held requests flush
+    assert res.replayed == 1
+    assert router.owner[rid1] == "b"
+    for _ in range(100):
+        if not router.inflight:
+            break
+        router.step()
+    assert router.dropped() == [] and router.duplicates == 0
+    assert {rid0, rid1, rid2} <= set(router.completed)
+
+
+def test_poisson_traffic_is_deterministic_and_bounded(small_model,
+                                                      tmp_path):
+    cfg, _ = small_model
+    a, b = (TrafficGenerator(2.0, seed=5, vocab=cfg.vocab_size, limit=9)
+            for _ in range(2))
+
+    class _Sink:
+        def __init__(self):
+            self.calls = []
+
+        def submit(self, prompt, max_new):
+            self.calls.append((list(prompt), max_new))
+            return len(self.calls)
+
+    sa, sb = _Sink(), _Sink()
+    while not a.drained():
+        a.tick(sa)
+        b.tick(sb)
+    assert sa.calls == sb.calls          # same seed, same traffic
+    assert len(sa.calls) == 9            # the limit is a hard cap
+
+
+def test_move_deadline_is_reported_not_silent(small_model, tmp_path):
+    src = _engine(small_model, 1)
+    dst = _engine(small_model, 1)
+    src.submit(Request(rid=1, prompt=np.array([3, 5], np.int32),
+                       max_new=6))
+    src.step()
+    res = migrate_sessions(src, dst, via=f"localfs:{tmp_path}",
+                           deadline_s=1e-9)
+    assert not res.within_deadline
+    assert res.deadline_s == 1e-9
+
+
+def test_policy_migration_knob_validation():
+    with pytest.raises(PolicyError, match="drain_deadline_s"):
+        Policy(drain_deadline_s=0)
+    with pytest.raises(PolicyError, match="migrate_batch"):
+        Policy(migrate_batch=0)
+    p = Policy(drain_deadline_s=0.5, migrate_batch=2)
+    assert (p.drain_deadline_s, p.migrate_batch) == (0.5, 2)
+
+
+def test_migration_error_paths(small_model, tmp_path):
+    sess = CheckpointSession(f"localfs:{tmp_path}/s")
+    with pytest.raises(PolicyError, match="no app attached"):
+        sess.migrate(_engine(small_model, 1))
+    eng = _engine(small_model, 1)
+    with pytest.raises(MigrationError, match="extract_sessions"):
+        migrate_sessions(object(), eng, via=f"localfs:{tmp_path}")
+    with pytest.raises(MigrationError, match="unknown engine"):
+        FleetRouter({"a": eng}, via=f"localfs:{tmp_path}") \
+            .migrate("a", "nope")
+    with pytest.raises(MigrationError, match="itself"):
+        FleetRouter({"a": eng}, via=f"localfs:{tmp_path}") \
+            .migrate("a", "a")
+    with pytest.raises(MigrationError, match="at least one engine"):
+        FleetRouter({}, via=f"localfs:{tmp_path}")
+
+
+# --- supervisor: planned moves -------------------------------------------
+
+def test_planned_move_keeps_vid_stable_and_recycles_the_host():
+    sup = ClusterSupervisor([0, 1, 2], spares=[7])
+    logical = sup.hostmap.logical_of(1)
+    vid = sup.hostmap.vid_of(1) if hasattr(sup.hostmap, "vid_of") else None
+    target = sup.planned_move(1)
+    assert sup.world == [0, 7, 2]
+    assert sup.hostmap.logical_of(7) == logical
+    assert sup.hostmap.logical_of(1) is None
+    if vid is not None:
+        assert sup.hostmap.vid_of(7) == vid     # the rebind IS the vid
+    assert sup.policy.spares == [1]             # drained, not dead
+    assert sorted(sup.monitor.hosts) == [0, 2, 7]
+    assert target.mapping == {1: 7}
+    inc = sup.incidents[-1]
+    assert inc.action == "planned_move" and inc.dead == []
+
+
+def test_planned_move_rejects_bad_worlds():
+    sup = ClusterSupervisor([0, 1], spares=[5])
+    with pytest.raises(SupervisorError, match="not part of this job"):
+        sup.planned_move(9)
+    with pytest.raises(SupervisorError, match="already serves"):
+        sup.planned_move(0, to=1)
+
+
+class _Counter:
+    """Minimal CheckpointableApp for the planned-drain (shrink) path."""
+    kind = "migration-test-counter"
+
+    def __init__(self, step=0):
+        self.step = step
+
+    def checkpoint_state(self):
+        up = UpperHalf()
+        up.register("step", "step", np.int64(self.step))
+        return up
+
+    def checkpoint_step(self):
+        return self.step
+
+    def job_meta(self):
+        return {"kind": self.kind}
+
+    def bind(self, restore):
+        self.step = int(restore.scalar("step"))
+        restore.release()
+
+
+@register_app_kind(_Counter.kind)
+def _restore_counter(restore):
+    app = _Counter()
+    app.bind(restore)
+    return app
+
+
+def test_planned_drain_without_spare_shrinks_on_purpose(tmp_path):
+    sess = CheckpointSession(f"localfs:{tmp_path}/job",
+                             Policy(async_save=False))
+    app = sess.attach(_Counter(step=3))
+    sess.snapshot(block=True)
+    sup = sess.supervise([0, 1], spares=[], heartbeat_timeout=3.0)
+    target = sup.planned_move(1)        # no spare: the world shrinks
+    assert sup.world == [0]
+    assert target.hosts == [0] and target.step == 3
+    assert sup.runner is not app        # rebuilt through the binder
+    assert sup.runner.step == 3
+    assert sup.incidents[-1].action == "planned_drain"
+
+
+def test_planned_drain_refuses_to_empty_the_world():
+    sup = ClusterSupervisor([0])
+    with pytest.raises(SupervisorError, match="empty the world"):
+        sup.planned_move(0)
+
+
+# --- launchers -----------------------------------------------------------
+
+def test_serve_launcher_migrate_to(tmp_path, capsys):
+    from repro.launch import serve
+    rc = serve.main(["--arch", f"{ARCH}-smoke", "--requests", "3",
+                     "--max-new", "4", "--max-seq", "32", "--slots", "2",
+                     "--store", f"localfs:{tmp_path}/svc",
+                     "--migrate-to", "3@2"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "migrated" in out and "3-slot engine" in out
+    # every request finished with its full budget after the move
+    assert out.count("rid=") == 3
+
+
+def test_serve_launcher_migrate_to_needs_store(capsys):
+    from repro.launch import serve
+    rc = serve.main(["--arch", f"{ARCH}-smoke", "--migrate-to", "2@1"])
+    assert rc == 2
+    assert "--migrate-to needs --store" in capsys.readouterr().err
+
+
+def test_drain_flag_validation(capsys):
+    from repro.launch import serve
+    rc = serve.main(["--arch", f"{ARCH}-smoke", "--drain", "0@3"])
+    assert rc == 2      # --drain without --supervise
+    rc = serve.main(["--arch", f"{ARCH}-smoke", "--supervise",
+                     "--store", "localfs:/tmp/x", "--drain", "9@3"])
+    assert rc == 2      # out-of-world host
+    assert "not in the simulated world" in capsys.readouterr().err
+
+
+def test_fleet_launcher_end_to_end(tmp_path, capsys):
+    from repro.launch import fleet
+    rc = fleet.main(["--arch", f"{ARCH}-smoke", "--engines", "2",
+                     "--slots", "2", "--max-seq", "32", "--rate", "1.5",
+                     "--requests", "5", "--seed", "3",
+                     "--store", f"localfs:{tmp_path}/fleet",
+                     "--migrate", "e0:e1@3"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "migrate e0 -> e1" in out
+    assert "0 dropped, 0 duplicated" in out

@@ -187,6 +187,215 @@ def test_missing_blob_fails_loudly_not_lazily(tmp_path):
         mgr.restore(1, streaming=True)
 
 
+# --- failure-path accounting -------------------------------------------------
+# a failed leaf must not leak bytes or keep fetching blobs nobody wants
+
+def _w_chain_blobs(be):
+    """(full blob of params['w'] at step 1, its xor-link blobs at 2)."""
+    m1, m2 = be.get_manifest(1), be.get_manifest(2)
+    full = deltamod.leaf_blob_names(
+        m1["entries"]["params"]["leaves"]["['w']"])[0]
+    sibs = set(deltamod.leaf_blob_names(
+        m2["entries"]["params"]["leaves"]["['w']"]))
+    assert sibs, "the xor link must own blobs for the regression to bite"
+    return full, sibs
+
+
+def _drain(sm):
+    """Wait until every leaf resolved (value or error)."""
+    for fut in sm._futures.values():
+        try:
+            fut.result(timeout=20)
+        except Exception:
+            pass
+    deadline = time.monotonic() + 20
+    while not sm.complete:
+        assert time.monotonic() < deadline, "materializer never drained"
+        time.sleep(0.01)
+
+
+def test_failed_leaf_drops_queued_sibling_blobs(tmp_path):
+    """When a leaf fails on one blob, its sibling blobs — owned by that
+    leaf alone — must leave the fetch queue, not keep being read into
+    bytes no decode will ever consume."""
+    from repro.api.errors import RestoreError
+    be = LocalFSBackend(str(tmp_path))
+    _save_chain(be, steps=2)
+    w_full, w_sibs = _w_chain_blobs(be)
+
+    reads = []
+
+    class _Failing:
+        def get_blob(self, name):
+            reads.append(name)
+            if name == w_full:
+                raise IOError("injected: every source lost this blob")
+            return be.get_blob(name)
+
+        def __getattr__(self, attr):
+            return getattr(be, attr)
+
+    sm = StreamingMaterializer(_Failing(), 2, fetch_workers=1,
+                               decode_workers=1)
+    sm.start()
+    _drain(sm)
+    with pytest.raises(RestoreError):
+        sm._futures[("params", "['w']")].result()
+    # the single fetch worker walked the queue in order: the xor link
+    # sat behind the failed full blob and must have been dropped
+    assert not (set(reads) & w_sibs), \
+        f"orphaned sibling blobs still fetched: {set(reads) & w_sibs}"
+    # every byte buffer found an owner or was freed
+    assert not sm._blobs, f"leaked blob bytes: {sorted(sm._blobs)}"
+    assert not sm._blob_refs and not sm._queue
+
+
+def test_inflight_blob_of_failed_leaf_is_not_retained(tmp_path):
+    """The in-flight variant: the sibling blob is already being read
+    when its only owner fails — the landed bytes must be discarded, not
+    stored ownerless in ``_blobs`` forever."""
+    from repro.api.errors import RestoreError
+    be = LocalFSBackend(str(tmp_path))
+    _save_chain(be, steps=2)
+    w_full, w_sibs = _w_chain_blobs(be)
+
+    fail_gate, sib_gate = threading.Event(), threading.Event()
+
+    class _Gated:
+        def get_blob(self, name):
+            if name == w_full:
+                assert fail_gate.wait(20), "fail gate never opened"
+                raise IOError("injected: every source lost this blob")
+            if name in w_sibs:
+                assert sib_gate.wait(20), "sibling gate never opened"
+            return be.get_blob(name)
+
+        def __getattr__(self, attr):
+            return getattr(be, attr)
+
+    sm = StreamingMaterializer(_Gated(), 2, fetch_workers=2,
+                               decode_workers=1)
+    sm.start()
+    # one worker is now blocked inside the doomed read, the other holds
+    # a sibling blob in flight; fail the leaf first, then land the
+    # sibling bytes into a materializer that no longer wants them
+    fail_gate.set()
+    w_fut = sm._futures[("params", "['w']")]
+    deadline = time.monotonic() + 20
+    while not w_fut.done():
+        assert time.monotonic() < deadline, "leaf never failed"
+        time.sleep(0.01)
+    sib_gate.set()
+    _drain(sm)
+    with pytest.raises(RestoreError):
+        w_fut.result()
+    assert not (w_sibs & set(sm._blobs)), \
+        "ownerless sibling bytes retained after the leaf failed"
+    assert not sm._blobs and not sm._blob_refs
+    # unaffected leaves still decoded from the same pipeline
+    want = CheckpointManager(be, async_save=False).restore(2)
+    np.testing.assert_array_equal(
+        np.asarray(sm._futures[("params", "['b']")].result()),
+        np.asarray(want.entries["params"]["['b']"]))
+
+
+def test_hot_ready_first_writer_wins(tmp_path):
+    """``hot_ready_s`` is written once, under the lock: later
+    ``hot_result()`` calls and ``timings()`` readers see one stable
+    value (decode workers and the empty-hot fallback share the same
+    first-writer-wins discipline)."""
+    be = LocalFSBackend(str(tmp_path))
+    mgr = _save_chain(be, steps=1)
+    streamed = mgr.restore(1, streaming=True)
+    sm = streamed.streamer
+    sm.wait_all()
+    t1 = sm.timings()["hot_ready_s"]
+    time.sleep(0.02)
+    sm.hot_result()                          # fallback must not rewrite
+    assert sm.timings()["hot_ready_s"] == t1
+
+    # empty hot tier: every entry is cold, so the value comes from the
+    # hot_result fallback — N racing callers must agree on one value
+    streamed2 = mgr.restore(1, streaming=True,
+                            lazy_kinds=("params", "opt_state", "step"))
+    sm2 = streamed2.streamer
+    sm2.wait_all()
+    seen = set()
+    barrier = threading.Barrier(8)
+
+    def racer():
+        barrier.wait()
+        sm2.hot_result()
+        seen.add(sm2.timings()["hot_ready_s"])
+
+    threads = [threading.Thread(target=racer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(20)
+    assert len(seen) == 1, f"hot_ready_s rewritten under race: {seen}"
+
+
+# --- chains written by someone else ------------------------------------------
+
+def test_entry_introduced_mid_chain_matches_eager(tmp_path):
+    """An entry that first appears in a non-base link (the writer
+    encodes its first appearance as ``full``) streams bit-identically
+    to the eager restore — the planner's run-start walk stops at the
+    introduction instead of KeyError-ing off the chain's base."""
+    be = LocalFSBackend(str(tmp_path))
+    mgr = CheckpointManager(be, async_save=False, delta_base_interval=8)
+    rng = np.random.RandomState(7)
+    up = _upper(1)
+    mgr.save(1, up, OpLog())
+    up.register("late", "opt_state", {"z": rng.randn(256).astype(np.float32)})
+    for s in (2, 3):
+        up.get("params")["w"][rng.randint(0, 20_000, 64)] += 0.5
+        up.get("late")["z"][rng.randint(0, 256, 16)] += 1.0
+        up.register("step", "step", np.int64(s))
+        mgr.save(s, up, OpLog())
+    m3 = be.get_manifest(3)
+    assert m3["entries"]["late"]["leaves"]["['z']"].get("mode") == "xor", \
+        "the introduced entry must ride a delta link for the cell to bite"
+    eager = mgr.restore(3)
+    streamed = mgr.restore(3, streaming=True)
+    _assert_same_entries(eager, streamed)
+
+
+def test_foreign_chain_missing_mid_link_fails_loudly_per_leaf(tmp_path):
+    """A chain whose mid manifest lacks an entry a later link xor's
+    against (a foreign writer, a hand-damaged store) must not KeyError
+    the whole streaming plan before any leaf decodes: planning succeeds,
+    unaffected entries restore, and only the broken leaf surfaces a
+    RestoreError naming what it needed."""
+    import glob as globmod
+    import json
+    from repro.api.errors import RestoreError
+    be = LocalFSBackend(str(tmp_path))
+    mgr = _save_chain(be, steps=3)
+    mid = sorted(globmod.glob(str(be.root / "manifests" / "step_*.json")))[1]
+    with open(mid) as f:
+        m = json.load(f)
+    del m["entries"]["opt_state"]
+    with open(mid, "w") as f:
+        json.dump(m, f)
+
+    # eager: a loud RestoreError (the xor link has no base), not KeyError
+    with pytest.raises(RestoreError, match="base-step"):
+        mgr.restore(3)
+
+    # streaming: the plan builds, the hot tier restores, only the broken
+    # cold entry faults loudly on touch
+    streamed = mgr.restore(3, streaming=True)
+    want = CheckpointManager(be, async_save=False).restore(
+        3, skip_entries=("opt_state",))
+    np.testing.assert_array_equal(
+        np.asarray(streamed.entries["params"]["['w']"]),
+        np.asarray(want.entries["params"]["['w']"]))
+    with pytest.raises(RestoreError, match="base-step"):
+        np.asarray(streamed.entries["opt_state"]["['m']"])
+
+
 # --- multi-source fetch ------------------------------------------------------
 
 def test_streaming_fetches_from_multiple_hosts(tmp_path):
