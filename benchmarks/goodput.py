@@ -1,0 +1,217 @@
+"""Goodput under churn: useful steps vs. what the fleet paid, measured.
+
+The MTTR benchmark prices ONE incident; a preemptible fleet pays for a
+*process* — Poisson deaths, grace-window preemption notices, hosts
+returning — and the number that justifies the whole C/R stack is how
+much useful work survives it. This benchmark drives a supervised
+trainer through a PINNED 50-event seeded Poisson churn trace
+(deterministic: same seed, same events, same virtual-clock decisions)
+and reports:
+
+  goodput       useful steps / attempted steps — deterministic on the
+                virtual clock, so it gates hard against a pinned floor;
+  steps_per_s   useful steps / wall-clock — folds in real restore and
+                repair cost (reported, not gated: shared runners);
+  per-incident  action, rollback cost, wall time for every executed
+                decision.
+
+The run also proves the churn engine's two survival claims end-to-end:
+every preemption with sufficient grace is drained proactively (the
+heartbeat-timeout path never fires for it), and a returned host is
+re-used by a later grow — with the final parameters BIT-IDENTICAL to
+an unchurned oracle run of the same step count.
+
+CLI:
+  PYTHONPATH=src:. python benchmarks/goodput.py \
+      [--smoke] [--check] [--json BENCH_goodput.json] [--save-trace P]
+
+``--check`` is the CI gate (soft in CI — first-land pin): goodput >=
+pinned floor, oracle match, preemptions survived, grow executed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+
+from repro.api import CheckpointSession, Policy
+from repro.core.churn import ChurnEngine, ChurnTrace
+from repro.train.loop import Trainer, TrainJob
+
+ARCH = "starcoder2-3b-matrix"        # tiny 1-layer config: the benchmark
+SHAPE = "train_s8_b2"                # prices the *churn*, not the matmuls
+STEPS = 60
+HOSTS = [0, 1, 2, 3]
+SPARES = [7]
+# exactly 50 events inside the horizon (15 die / 12 preempt /
+# 23 return at this rate+seed) — the "50-event pinned trace" CI runs
+TRACE_KW = dict(rate=0.85, seed=11, horizon=float(STEPS), preempt=0.5,
+                grace=3.0, return_after=6.0, max_events=50)
+# measured 0.923 on the pinned trace (deterministic); margin for a
+# future policy change that trades a little goodput on purpose
+GOODPUT_FLOOR = 0.85
+
+
+def pinned_trace() -> ChurnTrace:
+    return ChurnTrace.poisson(HOSTS, **TRACE_KW)
+
+
+def _oracle_digest(steps: int) -> str:
+    t = Trainer(TrainJob(arch=ARCH, shape_key=SHAPE), (1, 1),
+                ("data", "model"))
+    t.init_state()
+    for _ in range(steps):
+        t.train_steps(1)
+    return t.params_digest()
+
+
+def run_churned(trace: ChurnTrace, steps: int) -> dict:
+    """The supervised loop from launch/train.py, against the trace."""
+    root = tempfile.mkdtemp()
+    sess = None
+    try:
+        sess = CheckpointSession(f"sharded:{root}?hosts=4",
+                                 Policy(interval=4, async_save=False))
+        tr = sess.attach(Trainer(TrainJob(arch=ARCH, shape_key=SHAPE),
+                                 (1, 1), ("data", "model"),
+                                 manager=sess.manager))
+        tr.init_state()
+        engine = ChurnEngine(trace,
+                             snapshot=lambda: sess.snapshot(block=True))
+        sup = sess.supervise(list(HOSTS), spares=list(SPARES),
+                             heartbeat_timeout=3.0, clock=engine.clock,
+                             n_shards=tr.shape.global_batch)
+        engine.attach(sup)
+        sess.snapshot(block=True)
+        wall0 = time.monotonic()
+        step = tr.checkpoint_step()
+        while step < steps:
+            tr = sup.runner
+            tr.train_steps(1)
+            step = tr.checkpoint_step()
+            sess.maybe_snapshot(final=step == steps)
+            if engine.tick(step):
+                step = sup.runner.checkpoint_step()
+        wall = time.monotonic() - wall0
+        rep = engine.report()
+        graceful = {e.host for e in trace
+                    if e.kind == "preempt" and e.grace_s >= 1.0}
+        died_by_timeout = {d for r in rep.incidents for d in r["dead"]}
+        return {
+            "digest": sup.runner.params_digest(),
+            "report": rep,
+            "wall_s": wall,
+            "events_total": len(trace),
+            "events_unfired": len(engine.unfired_events()),
+            "graceful_preempt_hosts": sorted(graceful),
+            "graceful_preempts_timed_out": sorted(
+                graceful & died_by_timeout),
+            "final_world": list(sup.world),
+        }
+    finally:
+        if sess is not None:
+            sess.close()
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def run(smoke: bool = False) -> dict:
+    trace = pinned_trace()
+    out = run_churned(trace, STEPS)
+    out["oracle_match"] = out["digest"] == _oracle_digest(STEPS)
+    return out
+
+
+def rows_of(out: dict) -> list:
+    rep = out["report"]
+    rows = [
+        ("goodput/steps", rep.goodput,
+         f"{rep.useful_steps} useful / {rep.attempted_steps} attempted"),
+        ("goodput/steps_per_s", rep.steps_per_s,
+         f"{rep.useful_steps} useful in {out['wall_s']:.1f}s wall"),
+        ("goodput/lost_steps", float(rep.lost_steps),
+         f"across {len(rep.incidents)} incidents"),
+        ("goodput/proactive_preempts", float(rep.proactive_preempts),
+         "graceful notices drained before the deadline"),
+        ("goodput/degraded_preempts", float(rep.degraded_preempts),
+         "notices too short to act on"),
+        ("goodput/grows", float(rep.grows),
+         "returned hosts put back to work"),
+        ("goodput/oracle_match", float(out["oracle_match"]),
+         "final params identical to the unchurned run"),
+    ]
+    for i, r in enumerate(rep.incidents):
+        rows.append((f"goodput/incident_{i:02d}/{r['action']}",
+                     float(r["lost_steps"]),
+                     f"t={r['t']:g} dead={r['dead']} "
+                     f"wall={r['wall_s']:.2f}s"))
+    return rows
+
+
+def check(out: dict) -> None:
+    rep = out["report"]
+    failures = []
+    if not out["oracle_match"]:
+        failures.append("post-churn params differ from the unchurned "
+                        "oracle (grow/shrink continuation broke)")
+    if rep.goodput < GOODPUT_FLOOR:
+        failures.append(f"goodput {rep.goodput:.3f} < pinned floor "
+                        f"{GOODPUT_FLOOR} (deterministic trace — a real "
+                        "regression, not noise)")
+    if out["graceful_preempts_timed_out"]:
+        failures.append(
+            f"hosts {out['graceful_preempts_timed_out']} had a graceful "
+            "preemption notice but still died by heartbeat timeout "
+            "(the proactive path failed)")
+    if rep.proactive_preempts < 1:
+        failures.append("the pinned trace contains graceful preemptions "
+                        "but none was handled proactively")
+    if rep.grows < 1:
+        failures.append("the pinned trace returns hosts but no grow "
+                        "ever re-used one")
+    if failures:
+        raise SystemExit("goodput gate FAILED: " + "; ".join(failures))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="accepted for CI symmetry (the pinned trace IS "
+                         "the smoke size)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless goodput >= pinned floor, "
+                         "the oracle matches, preemptions were survived "
+                         "and a grow executed")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the report as JSON (CI artifact)")
+    ap.add_argument("--save-trace", default=None, metavar="PATH",
+                    help="write the pinned churn trace as JSONL (replay "
+                         "with launch/train.py --churn-trace)")
+    args = ap.parse_args()
+    if args.save_trace:
+        pinned_trace().save(args.save_trace)
+    out = run(smoke=args.smoke)
+    rows = rows_of(out)
+    print("name,value,derived")
+    for n, v, d in rows:
+        print(f"{n},{v:.3f},{d}")
+    if args.json:
+        rep = out["report"]
+        with open(args.json, "w") as f:
+            json.dump({
+                "arch": ARCH, "steps": STEPS, "hosts": HOSTS,
+                "spares": SPARES, "trace": TRACE_KW,
+                "events_total": out["events_total"],
+                "events_unfired": out["events_unfired"],
+                "goodput_floor": GOODPUT_FLOOR,
+                "oracle_match": out["oracle_match"],
+                "final_world": out["final_world"],
+                **rep.to_json(),
+            }, f, indent=2)
+    if args.check:
+        check(out)
+
+
+if __name__ == "__main__":
+    main()

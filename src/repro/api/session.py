@@ -264,7 +264,9 @@ class CheckpointSession:
                   on_restored: Optional[Callable[[Any, Any], None]] = None,
                   teardown: Optional[Callable[[Any], None]] = None,
                   reassign: Optional[Callable[[Any, Any], None]] = None,
-                  repair_storage: bool = True):
+                  repair_storage: bool = True,
+                  event_sink: Optional[
+                      Callable[[float, str, Dict[str, Any]], None]] = None):
         """Close the failure loop over this session: a
         ``ClusterSupervisor`` whose restore hook goes back through
         ``CheckpointSession.restore`` — so a RESTART/SHRINK decision
@@ -275,7 +277,9 @@ class CheckpointSession:
         (dict, or ``callable(RestoreTarget) -> dict`` for kwargs that
         depend on the surviving topology — e.g. serving's proportional
         slot count); ``on_restored(app, target)`` observes each executed
-        rebuild. The supervisor also drives the app only through
+        rebuild; ``event_sink(t, kind, detail)`` taps the supervisor's
+        event stream live (``core.churn.IncidentLog`` writes it as
+        JSONL). The supervisor also drives the app only through
         protocol hooks (``quiesce`` at teardown, ``apply_reassignment``
         for rebalances)."""
         from repro.core.supervisor import ClusterSupervisor
@@ -294,7 +298,8 @@ class CheckpointSession:
             heartbeat_timeout=heartbeat_timeout, clock=clock,
             allow_shrink=allow_shrink, n_shards=n_shards,
             restore=_restore, teardown=teardown, reassign=reassign,
-            repair_storage=repair_storage, runner=self._app)
+            repair_storage=repair_storage, runner=self._app,
+            event_sink=event_sink)
         self.supervisor = sup
         return sup
 

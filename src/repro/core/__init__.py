@@ -26,3 +26,6 @@ from repro.core.failure import (
 from repro.core import replication
 from repro.core.supervisor import (ClusterSupervisor, Incident,
                                    RestoreTarget, SupervisorError)
+from repro.core.churn import (ChurnEngine, ChurnEvent, ChurnTrace,
+                              GoodputReport, IncidentLog,
+                              parse_churn_spec, read_incident_log)

@@ -33,6 +33,11 @@ class FailureAction(Enum):
     # (maintenance, defrag). Decided by ClusterSupervisor.planned_move,
     # never by FailurePolicy — nothing is dead.
     PLANNED_MOVE = "planned_move"
+    # not a failure either: elastic expansion — an idle host joins the
+    # world and the runner rebuilds onto the larger topology (the
+    # inverse of SHRINK). Decided by ClusterSupervisor.grow, never by
+    # FailurePolicy.
+    GROW = "grow"
 
 
 @dataclass

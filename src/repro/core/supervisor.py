@@ -145,7 +145,10 @@ class ClusterSupervisor:
                  reassign: Optional[Callable[[Any, Any], None]] = None,
                  straggler_k: float = 1.5,
                  repair_storage: bool = True,
-                 runner: Any = None) -> None:
+                 runner: Any = None,
+                 event_sink: Optional[
+                     Callable[[float, str, Dict[str, Any]], None]] = None,
+                 ) -> None:
         self.clock = clock
         self.manager = manager
         self.hostmap = HostMap(hosts)
@@ -163,6 +166,9 @@ class ClusterSupervisor:
         self.runner = runner
         self.incidents: List[Incident] = []
         self.events: List[Tuple[float, str, Dict[str, Any]]] = []
+        # optional live tap on the event stream (incident logs): called
+        # as (t, kind, detail) for every _event, as it happens
+        self._event_sink = event_sink
         # the last assignment THIS supervisor applied; None until it has
         # rebalanced once. Deliberately not seeded with a synthetic
         # initial layout: the runner may have logged its own
@@ -199,7 +205,10 @@ class ClusterSupervisor:
         return ok[-1] if ok else None
 
     def _event(self, kind: str, **detail) -> None:
-        self.events.append((self.clock(), kind, detail))
+        t = self.clock()
+        self.events.append((t, kind, detail))
+        if self._event_sink is not None:
+            self._event_sink(t, kind, detail)
 
     # --- the loop: ingest, detect, decide, execute ----------------------
 
@@ -320,6 +329,61 @@ class ClusterSupervisor:
             action = "planned_drain"
         self.incidents.append(Incident(
             action=action, dead=[], step=target.step,
+            mttr_s=self.clock() - t0, wall_s=time.monotonic() - w0))
+        return target
+
+    def grow(self, host: Optional[int] = None) -> RestoreTarget:
+        """Elastic expansion — the inverse of SHRINK: admit an idle
+        physical host into the world and rebuild the runner onto the
+        larger topology from the latest restorable step (snapshot first
+        and the grow loses zero steps). The host binds to the lowest
+        logical coordinate a previous shrink/drain vacated (its vid
+        revives, so shard ownership keyed on the logical rank follows)
+        or to a brand-new coordinate; shards rebalance over the grown
+        world and the ``RestoreTarget``'s ``rewrite_op`` replays the
+        logged ``DataReassign`` onto the new assignment during
+        Incarnation replay — the same elastic-restore machinery a
+        shrink uses, pointed the other way.
+
+        ``host`` defaults to the first spare (a returned/recovered host
+        re-admitted to the pool rejoins as capacity, not dead weight).
+        """
+        if host is None:
+            if not self.policy.spares:
+                raise SupervisorError(
+                    "grow needs an idle host to admit and the spare "
+                    "pool is empty")
+            host = self.policy.spares[0]
+        if host in self.world:
+            raise SupervisorError(
+                f"host {host} already serves this job "
+                f"({self.world}); grow admits an *idle* host")
+        t0, w0 = self.clock(), time.monotonic()
+        if host in self.policy.spares:
+            self.policy.spares.remove(host)
+        logical = self.hostmap.admit(host)
+        self.monitor.hosts[host] = HostState(last_heartbeat=self.clock())
+        hosts = self.world
+        assignment = (tuple(rebalance_shards(self.n_shards, hosts))
+                      if self.n_shards is not None else None)
+        self._event("grow", host=host, logical=logical, hosts=hosts)
+        target = RestoreTarget(FailureAction.GROW, step=None,
+                               hosts=hosts, assignment=assignment)
+        self._recover(target)
+        if assignment is not None:
+            # same dance as _do_shrink: the rewrite only transforms an
+            # *existing* logged DataReassign — read what replay landed
+            # and log the grown assignment freshly if it didn't
+            current = getattr(getattr(self.runner, "lower", None),
+                              "data_assignment", None)
+            self._assignment = (tuple(map(tuple, current))
+                                if current is not None else None)
+            self._apply_assignment(assignment, reason="grow",
+                                   hosts=[host])
+        self._event("restored", action="grow", step=target.step,
+                    hosts=hosts)
+        self.incidents.append(Incident(
+            action="grow", dead=[], step=target.step,
             mttr_s=self.clock() - t0, wall_s=time.monotonic() - w0))
         return target
 

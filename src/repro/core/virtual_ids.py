@@ -177,6 +177,20 @@ class HostMap:
         re-adopts released vids, so ``remap`` can revive the slot)."""
         self._table.release(self._vids[logical])
 
+    def admit(self, physical: int) -> int:
+        """Grow: bind a physical host to a logical slot — the lowest
+        coordinate a shrink/drain vacated if one exists (``bind``
+        re-adopts the released vid, so shard ownership keyed on the
+        logical rank revives with it), else a brand-new coordinate past
+        the current world. Returns the logical rank."""
+        for l in sorted(self._vids):
+            if not self._table.is_bound(self._vids[l]):
+                self._table.bind(self._vids[l], physical)
+                return l
+        l = max(self._vids) + 1 if self._vids else 0
+        self._vids[l] = self._table.create("host", physical)
+        return l
+
 
 # --- device correspondence ---------------------------------------------------
 

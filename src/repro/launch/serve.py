@@ -34,11 +34,13 @@ import jax
 import numpy as np
 
 from repro.configs import registry as cfg_registry
+from repro.core import IncidentLog
 from repro.launch.common import (add_store_args, build_session,
                                  parse_resume_arg, resolve_store,
                                  restore_timings_line, validate_resume)
 from repro.launch.supervise import (SimWorldDriver, add_supervise_args,
-                                    parse_drain_arg, parse_supervise_args)
+                                    parse_churn_args, parse_drain_arg,
+                                    parse_supervise_args)
 from repro.models import model as M
 from repro.serving.engine import Request, ServingEngine
 
@@ -68,6 +70,13 @@ def main(argv=None) -> int:
         print(err, file=sys.stderr)
         return 2
     drain, err = parse_drain_arg(args, "serve")
+    if err is not None:
+        print(err, file=sys.stderr)
+        return 2
+    # a serving drain has no fixed step count; the generated-trace
+    # horizon is a bound on the engine-step clock, not a promise
+    trace, err = parse_churn_args(args, "serve",
+                                  horizon=args.requests * args.max_new)
     if err is not None:
         print(err, file=sys.stderr)
         return 2
@@ -161,7 +170,8 @@ def main(argv=None) -> int:
     already = sum(len(r.out) for r in reqs)
     t0 = time.monotonic()
     if args.supervise:
-        eng, reg = _run_supervised(args, sess, eng, params, kill, drain)
+        eng, reg = _run_supervised(args, sess, eng, params, kill, drain,
+                                   trace)
         reqs = sorted(reg.values(), key=lambda r: r.rid)
     elif migrate_to is not None:
         eng, reg = _run_migrated(args, sess, eng, migrate_to)
@@ -234,21 +244,24 @@ def _run_migrated(args, sess, eng, migrate_to, max_steps: int = 10_000):
 
 
 def _run_supervised(args, sess, eng, params, kill, drain=None,
-                    max_steps: int = 10_000):
+                    trace=None, max_steps: int = 10_000):
     """Drain the engine under the failure loop: one virtual-clock tick
     per engine step; a detected death swaps the engine under us through
     the session's app-kind registry (shrink restores the live sessions
-    onto proportionally fewer slots through the elastic re-slot path).
+    onto proportionally fewer slots through the elastic re-slot path;
+    a churn-driven grow expands them back through the same path).
     Returns the final engine and the latest Request object seen per
     rid — finished or restored, the newest object holds the request's
     authoritative output."""
     world = list(range(args.hosts))
     spares = list(range(args.hosts, args.hosts + args.spares))
-    driver = SimWorldDriver(kill, drain)
+    driver = SimWorldDriver(kill, drain, trace=trace,
+                            snapshot=lambda: sess.snapshot(block=True))
 
     def restore_kwargs(target):
         # ceiling division: losing 1 of 4 hosts must not halve a
         # 2-slot engine — capacity shrinks proportionally, rounded up
+        # (and a grow back to the full world restores the full slots)
         n_slots = max(1, -(-args.slots * len(target.hosts) // args.hosts))
         return {"params": params, "n_slots": n_slots}
 
@@ -256,11 +269,13 @@ def _run_supervised(args, sess, eng, params, kill, drain=None,
         print(f"[supervisor] restored {len(e.live_requests())} live "
               f"sessions on {e.n_slots} slots at engine step {e.steps}")
 
+    sink = IncidentLog(args.incident_log) if args.incident_log else None
     sup = sess.supervise(
         world, spares=spares,
         heartbeat_timeout=args.heartbeat_timeout,
         clock=driver.clock, allow_shrink=not args.no_shrink,
-        restore_kwargs=restore_kwargs, on_restored=on_restored)
+        restore_kwargs=restore_kwargs, on_restored=on_restored,
+        event_sink=sink)
     driver.attach(sup)
     if sess.latest_step() is None:
         sess.snapshot(block=True)   # baseline: a death before the first
@@ -278,6 +293,9 @@ def _run_supervised(args, sess, eng, params, kill, drain=None,
         sess.maybe_snapshot()   # Policy.interval is the one cadence
         driver.tick(eng.steps)
     driver.warn_if_kill_pending()
+    driver.print_goodput()
+    if sink is not None:
+        sink.close()
     sess.wait()
     return sup.runner, reg
 

@@ -36,12 +36,13 @@ import sys
 
 import jax
 
-from repro.core import FailureAction
+from repro.core import FailureAction, IncidentLog
 from repro.launch.common import (add_store_args, build_session,
                                  parse_resume_arg, resolve_store,
                                  restore_timings_line, validate_resume)
 from repro.launch.supervise import (SimWorldDriver, add_supervise_args,
-                                    parse_drain_arg, parse_supervise_args)
+                                    parse_churn_args, parse_drain_arg,
+                                    parse_supervise_args)
 from repro.train.loop import Trainer, TrainJob
 
 
@@ -65,6 +66,10 @@ def main(argv=None) -> int:
         print(err, file=sys.stderr)
         return 2
     drain, err = parse_drain_arg(args, "launch")
+    if err is not None:
+        print(err, file=sys.stderr)
+        return 2
+    trace, err = parse_churn_args(args, "launch", horizon=args.steps)
     if err is not None:
         print(err, file=sys.stderr)
         return 2
@@ -112,7 +117,7 @@ def main(argv=None) -> int:
               f"({d},{args.model_mesh})")
 
     if args.supervise:
-        tr = _run_supervised(args, sess, tr, kill, drain)
+        tr = _run_supervised(args, sess, tr, kill, drain, trace)
     else:
         for step in range(tr.checkpoint_step(), args.steps):
             m = tr.train_steps(1)
@@ -125,29 +130,32 @@ def main(argv=None) -> int:
     return 0
 
 
-def _run_supervised(args, sess, tr, kill, drain=None):
+def _run_supervised(args, sess, tr, kill, drain=None, trace=None):
     """The failure loop around the step loop: every step is one tick of
     the simulated world's clock; live hosts heartbeat, the supervisor
     polls, and an executed decision swaps the runner under us — the
     restore goes back through the session's app-kind registry, so the
-    supervisor never touches trainer-specific code. A --drain trigger
-    runs the same loop's *planned* twin: ``supervisor.planned_move``
-    rebinds the healthy host's role to a spare (or shrinks on purpose)
-    without anything having died."""
+    supervisor never touches trainer-specific code. Scripted --drain
+    triggers and full --churn traces run through the same
+    ``ChurnEngine``: preemption notices snapshot proactively and drain
+    before the deadline, returned hosts re-enter the spare pool, and
+    the engine grows the world back when capacity is idle."""
     world = list(range(args.hosts))
     spares = list(range(args.hosts, args.hosts + args.spares))
-    driver = SimWorldDriver(kill, drain)
+    driver = SimWorldDriver(kill, drain, trace=trace,
+                            snapshot=lambda: sess.snapshot(block=True))
 
     def on_restored(t, target):
         print(f"[supervisor] restored at step "
               f"{t.checkpoint_step()} on hosts {target.hosts}")
 
+    sink = IncidentLog(args.incident_log) if args.incident_log else None
     sup = sess.supervise(
         world, spares=spares,
         heartbeat_timeout=args.heartbeat_timeout,
         clock=driver.clock, n_shards=tr.shape.global_batch,
         allow_shrink=not args.no_shrink,
-        on_restored=on_restored)
+        on_restored=on_restored, event_sink=sink)
     driver.attach(sup)
     if sess.latest_step() is None:
         sess.snapshot(block=True)   # baseline: a death before the first
@@ -160,14 +168,17 @@ def _run_supervised(args, sess, tr, kill, drain=None):
         print(f"step {m['step']:5.0f} loss {m['loss']:.4f} "
               f"hosts {sup.world}", flush=True)
         sess.maybe_snapshot(final=step == args.steps)
-        target = driver.tick(step)
-        if target is not None \
-                and target.action is not FailureAction.HOT_SPARE:
+        targets = driver.tick(step)
+        if any(t.action is not FailureAction.HOT_SPARE
+               for t in targets):
             step = sup.runner.checkpoint_step()  # rolled back
     driver.warn_if_kill_pending()
     for inc in sup.incidents:
         print(f"[supervisor] incident {inc.action}: dead={inc.dead} "
               f"step={inc.step} mttr={inc.wall_s:.2f}s")
+    driver.print_goodput()
+    if sink is not None:
+        sink.close()
     return sup.runner
 
 

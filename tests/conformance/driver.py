@@ -256,6 +256,64 @@ def run_shrink(spec: FamilySpec, store: str) -> None:
         f"{spec.family}: post-shrink digest {got} != reference {want}"
 
 
+def run_churn_grow(spec: FamilySpec, store: str) -> None:
+    """The churn round trip, cell-sized: a silent host SHRINKs the
+    world, real progress lands on the survivors, the host comes back
+    and GROW re-admits it — post-grow continuation bit-identical to the
+    uninterrupted reference. Shrink and grow are the same restore
+    primitive pointed in opposite directions, and this cell pins that
+    the direction flip loses nothing."""
+    dr, sh = spec.train, spec.shrink
+    want = reference_digest(spec)
+    with CheckpointSession(store, Policy(async_save=False)) as sess:
+        app = sess.attach(dr.fresh())
+        if sh.prepare is not None:
+            sh.prepare(app)
+        half = dr.total // 2
+        dr.advance(app, half)
+        sess.snapshot(block=True)
+
+        clock = [0.0]
+        sup = sess.supervise(list(sh.hosts), heartbeat_timeout=3.0,
+                             clock=lambda: clock[0], n_shards=sh.n_shards,
+                             restore_kwargs=sh.restore_kwargs)
+
+        def tick(alive: List[int]) -> None:
+            clock[0] += 1.0
+            for h in alive:
+                sup.beat(h, half)
+
+        survivors = [h for h in sh.hosts if h != sh.dead]
+        target = None
+        for _ in range(8):
+            tick(survivors)
+            target = sup.poll()
+            if target is not None:
+                break
+        assert target is not None and target.action.name == "SHRINK", \
+            f"{spec.family}: wanted SHRINK, got {target}"
+
+        # real progress on the shrunk world, checkpointed — the grow
+        # must pick up *newer* state than the shrink restored
+        app2 = sess.app
+        dr.advance(app2, 1)
+        sess.snapshot(block=True)
+
+        gt = sup.grow(sh.dead)                    # the host came back
+        assert gt.action.name == "GROW"
+        assert sorted(sup.world) == sorted(sh.hosts), \
+            f"{spec.family}: grow left world {sup.world}"
+        app3 = sess.app
+        assert app3 is not app2, "grow must rebuild the runner"
+        at = dr.step_of(app3)
+        assert at == half + 1, \
+            f"{spec.family}: grow restored at {at}, wanted {half + 1}"
+        dr.advance(app3, dr.total - at)
+        got = dr.digest(app3)
+    assert got == want, \
+        f"{spec.family}: post-grow digest {got} != reference {want}"
+
+
 class _GrowingApp:
     """Protocol citizen whose semantic state GROWS mid-run: a cold-tier
     entry first exists at step 3, so inside a delta chain its first

@@ -46,10 +46,15 @@ def fast_cells() -> List[Cell]:
     # new-entry cell is a chain-shape property — an app whose semantic
     # state grows mid-run, so an entry's first appearance is a non-base
     # delta link that both restore schedules must handle
+    # and one churn-grow cell: shrink-then-grow through the supervisor
+    # is a *sequencing* property of the restore primitive (elastic
+    # re-shard both directions), not a family property — one family
+    # stands in for all of them
     return [Cell(f, m, _backend_for(m, "localfs"))
             for f in FAMILIES for m in MODES] \
         + [Cell("attention", "degraded", "sharded"),
-           Cell("dynamic-entry", "midchain", "localfs")]
+           Cell("dynamic-entry", "midchain", "localfs"),
+           Cell("attention", "churn-grow", "localfs")]
 
 
 def slow_cells() -> List[Cell]:

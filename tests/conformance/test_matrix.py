@@ -40,6 +40,8 @@ def _run(cell: matrix.Cell, tmp_path) -> None:
         driver.run_shrink(spec, _store(cell.backend, tmp_path))
     elif cell.mode == "commit":
         driver.run_commit(spec, _store(cell.backend, tmp_path))
+    elif cell.mode == "churn-grow":
+        driver.run_churn_grow(spec, _store(cell.backend, tmp_path))
     elif cell.mode == "degraded":
         # a dead peer only has surviving copies to serve when the
         # store replicates — the cell pins the replicated package

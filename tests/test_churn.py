@@ -1,0 +1,251 @@
+"""The churn subsystem: traces record/replay bit-for-bit, the seeded
+generators are deterministic, and the ChurnEngine drives a real
+supervised Trainer through deaths / grace-window preemptions / returns
+with the invariant the whole design hangs on: however the topology
+churns (preempt-drain, timeout-shrink, grow back), the continuation is
+bit-identical to the unchurned oracle — and the goodput accounting
+says exactly what the churn cost."""
+import json
+
+import pytest
+
+from repro.api import CheckpointSession, Policy
+from repro.core import FailureAction
+from repro.core.churn import (ChurnEngine, ChurnEvent, ChurnTrace,
+                              IncidentLog, parse_churn_spec,
+                              read_incident_log)
+from repro.train.loop import Trainer, TrainJob
+
+JOB = TrainJob(arch="starcoder2-3b-matrix", shape_key="train_s8_b2")
+STEPS = 14
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    t = Trainer(JOB, (1, 1), ("data", "model"))
+    t.init_state()
+    for _ in range(STEPS):
+        t.train_steps(1)
+    return t.params_digest()
+
+
+# --- the trace: record/replay + generators -----------------------------------
+
+def test_trace_jsonl_roundtrip(tmp_path):
+    trace = ChurnTrace([
+        ChurnEvent(t=3, kind="preempt", host=1, grace_s=2.5),
+        ChurnEvent(t=1, kind="die", host=0),
+        ChurnEvent(t=9, kind="return", host=0),
+        ChurnEvent(t=5, kind="drain", host=2),
+    ])
+    # construction sorts by time, stably
+    assert [e.t for e in trace] == [1, 3, 5, 9]
+    path = tmp_path / "trace.jsonl"
+    trace.save(path)
+    back = ChurnTrace.load(path)
+    assert back.to_jsonl() == trace.to_jsonl()
+    # grace survives the roundtrip; non-preempts don't carry it
+    lines = [json.loads(l) for l in trace.to_jsonl().splitlines()]
+    assert lines[1]["grace_s"] == 2.5
+    assert "grace_s" not in lines[0]
+
+
+def test_trace_rejects_bad_input():
+    with pytest.raises(ValueError, match="unknown churn event kind"):
+        ChurnEvent(t=0, kind="explode", host=0)
+    with pytest.raises(ValueError, match="not JSON"):
+        ChurnTrace.from_jsonl('{"t": 0, "kind": "die", "host": 0}\nwat\n')
+    with pytest.raises(ValueError, match="bad churn event"):
+        ChurnTrace.from_jsonl('{"t": 0, "kind": "die"}\n')
+
+
+def test_poisson_generator_is_deterministic_and_sane():
+    kw = dict(rate=0.4, seed=11, horizon=50, preempt=0.5, grace=3.0,
+              return_after=6.0)
+    a = ChurnTrace.poisson([0, 1, 2, 3], **kw)
+    b = ChurnTrace.poisson([0, 1, 2, 3], **kw)
+    assert a.to_jsonl() == b.to_jsonl()
+    assert len(a) > 0
+    assert all(e.t < 50 for e in a)
+    assert all(e.host in (0, 1, 2, 3) for e in a)
+    # a host only becomes a victim again after its return
+    gone = set()
+    for e in a:
+        if e.kind in ("die", "preempt"):
+            assert e.host not in gone, (e, "victim while absent")
+            gone.add(e.host)
+        elif e.kind == "return":
+            gone.discard(e.host)
+    # different seed, different trace
+    c = ChurnTrace.poisson([0, 1, 2, 3], **{**kw, "seed": 12})
+    assert c.to_jsonl() != a.to_jsonl()
+
+
+def test_poisson_max_events_caps_the_trace():
+    t = ChurnTrace.poisson([0, 1, 2, 3], rate=2.0, seed=1,
+                           horizon=10_000, max_events=50)
+    assert len(t) == 50
+
+
+def test_correlated_racks_die_together():
+    t = ChurnTrace.correlated_racks([0, 1, 2, 3], rate=0.2, rack_size=2,
+                                    seed=5, horizon=40)
+    deaths = [e for e in t if e.kind == "die"]
+    assert deaths
+    by_t = {}
+    for e in deaths:
+        by_t.setdefault(e.t, set()).add(e.host)
+    # every incident takes a whole (present) rack at one instant
+    for t_, hosts in by_t.items():
+        assert hosts in ({0, 1}, {2, 3}), (t_, hosts)
+
+
+def test_racks_spec_parses():
+    kind, params = parse_churn_spec("racks:rate=0.1,size=2,seed=4")
+    assert kind == "racks"
+    assert params == {"rate": 0.1, "rack_size": 2, "seed": 4}
+
+
+# --- the engine against a real supervised trainer ----------------------------
+
+def _supervised(tmp_path, trace, *, hosts, spares=(), steps=STEPS,
+                sink=None, min_grace=1.0):
+    sess = CheckpointSession(f"localfs:{tmp_path}",
+                             Policy(interval=4, async_save=False))
+    tr = sess.attach(Trainer(JOB, (1, 1), ("data", "model"),
+                             manager=sess.manager))
+    tr.init_state()
+    engine = ChurnEngine(trace, min_grace=min_grace,
+                         snapshot=lambda: sess.snapshot(block=True))
+    sup = sess.supervise(list(hosts), spares=list(spares),
+                         heartbeat_timeout=3.0, clock=engine.clock,
+                         n_shards=tr.shape.global_batch, event_sink=sink)
+    engine.attach(sup)
+    sess.snapshot(block=True)
+    step = tr.checkpoint_step()
+    while step < steps:
+        tr = sup.runner
+        tr.train_steps(1)
+        step = tr.checkpoint_step()
+        sess.maybe_snapshot(final=step == steps)
+        if engine.tick(step):
+            step = sup.runner.checkpoint_step()
+    sess.wait()
+    return sess, sup, engine
+
+
+def test_graceful_preempt_avoids_timeout_and_grow_reuses_return(
+        tmp_path, oracle):
+    """The acceptance story in one run: a preemption notice with enough
+    grace drains proactively (the heartbeat-timeout path never fires
+    for it), a death shrinks the world, the returned host re-enters the
+    spare pool and a grow puts it back to work — and the continuation
+    is bit-identical to the unchurned oracle."""
+    trace = ChurnTrace([
+        ChurnEvent(t=3, kind="preempt", host=2, grace_s=3.0),
+        ChurnEvent(t=6, kind="die", host=1),
+        ChurnEvent(t=10, kind="return", host=1),
+    ])
+    sess, sup, engine = _supervised(tmp_path, trace, hosts=[0, 1, 2])
+    rep = engine.report()
+    actions = [r["action"] for r in rep.incidents]
+    # preempt -> planned_drain (no spare: deliberate shrink), never a
+    # timeout death of host 2
+    assert rep.proactive_preempts == 1
+    assert "planned_drain" in actions
+    assert all(2 not in r["dead"] for r in rep.incidents)
+    # the death of host 1 WAS a timeout incident…
+    assert any(r["dead"] == [1] for r in rep.incidents)
+    # …and its return re-admitted it: the grow consumed it
+    assert rep.grows >= 1
+    assert 1 in sup.world
+    assert sup.runner.params_digest() == oracle
+    # accounting: every step was eventually retired, rollbacks cost work
+    assert rep.useful_steps == STEPS
+    assert rep.attempted_steps >= rep.useful_steps
+    assert rep.lost_steps == rep.attempted_steps - rep.useful_steps
+    assert 0.0 < rep.goodput <= 1.0
+    sess.close()
+
+
+def test_insufficient_grace_degrades_to_timeout_death(tmp_path, oracle):
+    """A notice shorter than min_grace is not actionable: the host just
+    dies at its deadline and the ordinary detect->decide path handles
+    it — counted as a degraded preemption."""
+    trace = ChurnTrace([
+        ChurnEvent(t=4, kind="preempt", host=1, grace_s=0.25),
+    ])
+    sess, sup, engine = _supervised(tmp_path, trace, hosts=[0, 1])
+    rep = engine.report()
+    assert rep.degraded_preempts == 1
+    assert rep.proactive_preempts == 0
+    assert any(r["dead"] == [1] for r in rep.incidents)
+    assert sup.runner.params_digest() == oracle
+    sess.close()
+
+
+def test_seeded_poisson_trace_end_to_end(tmp_path, oracle):
+    """A generated Poisson trace (deaths + preemptions + returns) over
+    a 3-host world with one spare: whatever the seed throws at the
+    fleet, the run finishes bit-identical to the unchurned oracle."""
+    trace = ChurnTrace.poisson([0, 1, 2], rate=0.25, seed=7,
+                               horizon=STEPS, preempt=0.5, grace=3.0,
+                               return_after=5.0)
+    assert len(trace) > 0
+    sess, sup, engine = _supervised(tmp_path, trace, hosts=[0, 1, 2],
+                                    spares=[7])
+    assert sup.runner.params_digest() == oracle
+    rep = engine.report()
+    assert rep.useful_steps == STEPS
+    sess.close()
+
+
+def test_incident_log_matches_event_stream(tmp_path, oracle):
+    """--incident-log's sink: replay a trace with the JSONL log
+    attached and the file must carry the supervisor's event stream,
+    event for event, in order, as valid JSONL."""
+    trace = ChurnTrace([
+        ChurnEvent(t=3, kind="die", host=1),
+        ChurnEvent(t=9, kind="return", host=1),
+    ])
+    path = tmp_path / "incidents.jsonl"
+    sink = IncidentLog(path)
+    sess, sup, engine = _supervised(tmp_path / "store", trace,
+                                    hosts=[0, 1], sink=sink)
+    sink.close()
+    logged = read_incident_log(path)
+    assert len(logged) == len(sup.events)
+    for row, (t, kind, detail) in zip(logged, sup.events):
+        assert row["t"] == t
+        assert row["event"] == kind
+        for k, v in detail.items():
+            got = row[k]
+            got = tuple(map(tuple, got)) if k == "assignment" else got
+            assert got == v or str(v) == got, (kind, k, got, v)
+    # the interesting kinds made it to disk
+    kinds = [r["event"] for r in logged]
+    assert "decision" in kinds and "host_return" in kinds \
+        and "restored" in kinds
+    assert sup.runner.params_digest() == oracle
+    sess.close()
+
+
+def test_engine_spare_death_and_absent_drain_are_absorbed(tmp_path):
+    """Edge events must not wedge the engine: a spare dying just leaves
+    the pool (and is never handed a workload), draining an absent host
+    is a logged no-op, preempting a spare reclaims it."""
+    trace = ChurnTrace([
+        ChurnEvent(t=2, kind="die", host=7),       # spare dies
+        ChurnEvent(t=3, kind="drain", host=9),     # not in world
+        ChurnEvent(t=4, kind="preempt", host=8, grace_s=5.0),  # spare
+    ])
+    sess, sup, engine = _supervised(tmp_path, trace, hosts=[0, 1],
+                                    spares=[7, 8], steps=8)
+    assert sup.policy.spares == []
+    assert sup.world == [0, 1]
+    kinds = [k for _, k, _ in sup.events]
+    assert "spare_lost" in kinds
+    assert "drain_skipped" in kinds
+    assert "spare_preempted" in kinds
+    assert engine.report().incidents == []
+    sess.close()

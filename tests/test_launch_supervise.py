@@ -1,12 +1,14 @@
-"""The launchers' --supervise surface: flag validation, the shared
-SimWorldDriver mechanics, and (slow) one end-to-end supervised train
-CLI run — so a regression in the glue between argparse and
+"""The launchers' --supervise surface: flag validation (including the
+repeatable --kill-host/--drain and the --churn[-trace] forms), the
+shared SimWorldDriver mechanics, and (slow) one end-to-end supervised
+train CLI run — so a regression in the glue between argparse and
 ClusterSupervisor can't ship silently."""
 import argparse
 
 import pytest
 
 from repro.launch.supervise import (SimWorldDriver, add_supervise_args,
+                                    parse_churn_args, parse_drain_arg,
                                     parse_supervise_args)
 
 
@@ -21,32 +23,93 @@ def _parse(argv):
 def test_defaults_fill_in_under_supervise():
     args = _parse(["--supervise"])
     kill, err = parse_supervise_args(args, "t")
-    assert err is None and kill is None
+    assert err is None and kill == []
     assert args.hosts == 2 and args.heartbeat_timeout == 3.0
 
 
 def test_kill_host_parses_and_validates_world():
     args = _parse(["--supervise", "--hosts", "4", "--kill-host", "2@8"])
     kill, err = parse_supervise_args(args, "t")
-    assert err is None and kill == (2, 8)
+    assert err is None and kill == [(2, 8)]
 
     args = _parse(["--supervise", "--hosts", "4", "--kill-host", "4@8"])
     kill, err = parse_supervise_args(args, "t")
-    assert kill is None and "not in the simulated world" in err
+    assert kill == [] and "not in the simulated world" in err
 
     args = _parse(["--supervise", "--kill-host", "nope"])
     kill, err = parse_supervise_args(args, "t")
-    assert kill is None and "expected H@STEP" in err
+    assert kill == [] and "expected H@STEP" in err
+
+
+def test_repeated_kill_and_drain_flags():
+    """The single-event limitation is gone: repeated occurrences become
+    a multi-event trace."""
+    args = _parse(["--supervise", "--hosts", "4",
+                   "--kill-host", "1@3", "--kill-host", "2@9",
+                   "--drain", "0@5", "--drain", "3@7"])
+    kill, err = parse_supervise_args(args, "t")
+    assert err is None and kill == [(1, 3), (2, 9)]
+    drain, err = parse_drain_arg(args, "t")
+    assert err is None and drain == [(0, 5), (3, 7)]
+
+
+def test_drain_rejects_killed_host_in_any_occurrence():
+    args = _parse(["--supervise", "--hosts", "4",
+                   "--kill-host", "1@3", "--drain", "1@5"])
+    kill, err = parse_supervise_args(args, "t")
+    assert err is None
+    drain, err = parse_drain_arg(args, "t")
+    assert drain == [] and "same host 1" in err
 
 
 @pytest.mark.parametrize("argv", [
     ["--kill-host", "1@2"], ["--spares", "1"], ["--no-shrink"],
     ["--hosts", "8"], ["--heartbeat-timeout", "1"],
+    ["--churn", "poisson:rate=0.1"], ["--churn-trace", "/tmp/x.jsonl"],
+    ["--incident-log", "/tmp/x.jsonl"],
 ])
 def test_supervise_flags_without_supervise_rejected(argv):
     kill, err = parse_supervise_args(_parse(argv), "t")
-    assert kill is None
+    assert kill == []
     assert err is not None and "--supervise" in err
+
+
+def test_churn_args_generate_and_replay(tmp_path):
+    from repro.core.churn import ChurnTrace
+    args = _parse(["--supervise", "--hosts", "4", "--churn",
+                   "poisson:rate=0.5,seed=3"])
+    assert parse_supervise_args(args, "t")[1] is None
+    trace, err = parse_churn_args(args, "t", horizon=20)
+    assert err is None and len(trace) > 0
+    assert all(0 <= e.host < 4 for e in trace)
+
+    path = tmp_path / "trace.jsonl"
+    trace.save(path)
+    args = _parse(["--supervise", "--hosts", "4",
+                   "--churn-trace", str(path)])
+    assert parse_supervise_args(args, "t")[1] is None
+    replay, err = parse_churn_args(args, "t", horizon=20)
+    assert err is None and replay.to_jsonl() == trace.to_jsonl()
+
+
+def test_churn_args_errors_are_actionable(tmp_path):
+    args = _parse(["--supervise", "--churn", "poisson:wat=1"])
+    assert parse_supervise_args(args, "t")[1] is None
+    trace, err = parse_churn_args(args, "t", horizon=10)
+    assert trace is None and "wat" in err
+
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text("not json\n")
+    args = _parse(["--supervise", "--churn-trace", str(bad)])
+    assert parse_supervise_args(args, "t")[1] is None
+    trace, err = parse_churn_args(args, "t", horizon=10)
+    assert trace is None and "not JSON" in err
+
+    args = _parse(["--supervise", "--churn", "poisson:rate=1",
+                   "--churn-trace", str(bad)])
+    assert parse_supervise_args(args, "t")[1] is None
+    trace, err = parse_churn_args(args, "t", horizon=10)
+    assert trace is None and "mutually exclusive" in err
 
 
 # --- the world driver --------------------------------------------------------
@@ -54,11 +117,16 @@ def test_supervise_flags_without_supervise_rejected(argv):
 class _FakeSup:
     """Just enough ClusterSupervisor surface for the driver."""
 
+    class _Policy:
+        def __init__(self):
+            self.spares = []
+
     def __init__(self, world):
         self.world = list(world)
         self.beats = []
         self.poll_results = []
         self.incidents = []
+        self.policy = self._Policy()
 
     def beat(self, host, step):
         self.beats.append((host, step))
@@ -66,12 +134,15 @@ class _FakeSup:
     def poll(self):
         return self.poll_results.pop(0) if self.poll_results else None
 
+    def _event(self, kind, **detail):
+        pass
+
 
 def test_driver_excludes_killed_host_from_its_step_on():
     sup = _FakeSup([0, 1, 2])
     d = SimWorldDriver(kill=(1, 5)).attach(sup)
-    assert d.tick(4) is None
-    assert d.tick(5) is None
+    assert d.tick(4) == []
+    assert d.tick(5) == []
     assert (1, 4) in sup.beats and (1, 5) not in sup.beats
     assert (0, 5) in sup.beats and (2, 5) in sup.beats
     assert d.clock() == 2.0                       # one tick per step
@@ -85,14 +156,16 @@ def test_driver_clears_kill_after_incident(capsys):
         hosts = [0, 2]
 
     class _I:
+        action = "shrink"
+        dead = [1]
+        step = 0
         wall_s = 0.5
 
     sup = _FakeSup([0, 1, 2])
     sup.poll_results = [_T()]
-    sup.incidents = [_I()]
     d = SimWorldDriver(kill=(1, 0)).attach(sup)
-    assert d.tick(1) is not None
-    assert d.kill is None
+    sup.incidents.append(_I())   # as poll() would
+    assert d.tick(1) != []
     d.warn_if_kill_pending()                      # resolved: no warning
     assert "WARNING" not in capsys.readouterr().err
 
@@ -101,7 +174,14 @@ def test_driver_warns_when_kill_never_fires(capsys):
     d = SimWorldDriver(kill=(1, 99)).attach(_FakeSup([0, 1]))
     d.tick(1)
     d.warn_if_kill_pending()
-    assert "never triggered an incident" in capsys.readouterr().err
+    assert "never fired" in capsys.readouterr().err
+
+
+def test_driver_warns_on_undetected_death(capsys):
+    d = SimWorldDriver(kill=(1, 1)).attach(_FakeSup([0, 1]))
+    d.tick(1)                    # fires, host goes silent…
+    d.warn_if_kill_pending()     # …but no incident before the run ended
+    assert "never produced an incident" in capsys.readouterr().err
 
 
 # --- end-to-end CLI (slow: trains a smoke model in-process) ------------------

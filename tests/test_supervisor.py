@@ -326,6 +326,136 @@ def test_shrink_policy_token_identical(tmp_path, reference):
     assert t2.params_digest() == ref_digest
 
 
+# --- grow (the inverse of shrink) --------------------------------------------
+
+def test_grow_after_shrink_token_identical(tmp_path, reference):
+    """Elastic expansion: after a shrink, the recovered host re-enters
+    the world through ``grow`` — its vacated logical slot revives (same
+    vid machinery as a hot-spare remap), the runner rebuilds from the
+    latest step with the logged DataReassign rewritten onto the grown
+    assignment, and the continuation is token-identical: moving shard
+    ownership never changes the data, in either direction."""
+    ref_digest, _ = reference
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False)
+    tr = Trainer(JOB, (1, 1), ("data", "model"), manager=mgr)
+    tr.init_state()
+    tr.apply_reassignment(rebalance_shards(4, [0, 1, 2]))
+    tr.train_steps(2)
+    tr.save(block=True)
+
+    def restore(target):
+        return Trainer.restore(mgr, step=target.step,
+                               rewrite_op=target.rewrite_op())
+
+    sup, w = _make([0, 1, 2], mgr, tr, restore=restore)
+    target = _drive_to_death(sup, w, dead_host=2, step=2)
+    assert target.action is FailureAction.SHRINK
+    t2 = sup.runner
+    t2.train_steps(1)            # progress on the shrunken world
+    t2.save(block=True)          # step 3: what the grow resumes from
+
+    sup.policy.spares.append(2)  # the host recovered
+    gt = sup.grow()
+    assert gt.action is FailureAction.GROW
+    assert gt.step == 3          # fresh checkpoint -> zero rollback
+    assert sup.world == [0, 1, 2]
+    assert sup.hostmap.logical_of(2) == 2    # vacated slot revived
+    assert sup.policy.spares == []
+    assert 2 in sup.monitor.hosts
+    assert sup.incidents[-1].action == "grow"
+    t3 = sup.runner
+    assert t3 is not t2
+    want = tuple(rebalance_shards(4, [0, 1, 2]))
+    assert t3.lower.data_assignment == want
+    assert t3.pipeline.assignment == list(want)
+    for _ in range(STEPS - 3):
+        t3.train_steps(1)
+    assert t3.params_digest() == ref_digest
+
+
+def test_grow_validates_host(tmp_path):
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False)
+    sup, _ = _make([0, 1], mgr, object())
+    with pytest.raises(SupervisorError, match="spare pool is empty"):
+        sup.grow()
+    with pytest.raises(SupervisorError, match="already serves"):
+        sup.grow(1)
+
+
+def test_grow_without_restorable_checkpoint_fails_loudly(tmp_path):
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False)
+    sup, _ = _make([0], mgr, object(),
+                   restore=lambda t: pytest.fail("must not restore"))
+    with pytest.raises(SupervisorError, match="no restorable"):
+        sup.grow(5)
+
+
+# --- planned_move: the unhappy paths -----------------------------------------
+
+def test_planned_move_without_spare_is_deliberate_shrink(tmp_path,
+                                                         reference):
+    """Draining with nobody to land on shrinks the world ON PURPOSE:
+    the drained host's logical slot unbinds, the runner rebuilds on the
+    survivors through the same ``_recover`` path a SHRINK decision
+    uses, and the continuation is token-identical."""
+    ref_digest, _ = reference
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False)
+    tr = Trainer(JOB, (1, 1), ("data", "model"), manager=mgr)
+    tr.init_state()
+    tr.apply_reassignment(rebalance_shards(4, [0, 1, 2]))
+    tr.train_steps(2)
+    tr.save(block=True)
+
+    def restore(target):
+        assert target.action is FailureAction.PLANNED_MOVE
+        assert target.hosts == [0, 1]
+        return Trainer.restore(mgr, step=target.step,
+                               rewrite_op=target.rewrite_op())
+
+    sup, _ = _make([0, 1, 2], mgr, tr, restore=restore)
+    target = sup.planned_move(2)
+    assert sup.world == [0, 1]
+    assert sup.hostmap.logical_of(2) is None
+    assert 2 not in sup.monitor.hosts
+    assert sup.incidents[-1].action == "planned_drain"
+    t2 = sup.runner
+    assert t2 is not tr
+    want = tuple(rebalance_shards(4, [0, 1]))
+    assert t2.lower.data_assignment == want
+    for _ in range(STEPS - 2):
+        t2.train_steps(1)
+    assert t2.params_digest() == ref_digest
+
+
+def test_drained_host_readmitted_by_later_failure(tmp_path, reference):
+    """A drained host goes back to the spare pool as REUSABLE capacity:
+    when its replacement later dies, the hot-spare policy consumes the
+    previously drained host and it serves again."""
+    ref_digest, _ = reference
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False)
+    tr = Trainer(JOB, (1, 1), ("data", "model"), manager=mgr)
+    tr.init_state()
+    tr.train_steps(2)
+    tr.save(block=True)
+
+    sup, w = _make([0, 1], mgr, tr, spares=[7],
+                   restore=lambda t: pytest.fail("hot paths must not "
+                                                 "restore"))
+    moved = sup.planned_move(1)
+    assert moved.mapping == {1: 7}
+    assert sup.world == [0, 7]
+    assert sup.policy.spares == [1]          # drained, not dead
+
+    target = _drive_to_death(sup, w, dead_host=7, step=2)
+    assert target.action is FailureAction.HOT_SPARE
+    assert target.mapping == {7: 1}
+    assert sup.world == [0, 1]               # the drained host is back
+    assert sup.policy.spares == []
+    for _ in range(STEPS - 2):
+        tr.train_steps(1)
+    assert tr.params_digest() == ref_digest
+
+
 # --- straggler feedback ------------------------------------------------------
 
 def test_straggler_triggers_logged_rebalance(tmp_path):
@@ -414,6 +544,76 @@ def test_serving_shrink_reslot_token_identical(tmp_path):
     live = eng2.live_requests()
     assert {r.rid for r in live} | set(finished) == set(want)
     eng2.run_until_drained(max_steps=200)
+    for r in live:
+        assert r.done and r.out == want[r.rid], (r.rid, r.out, want[r.rid])
+    for rid, out in finished.items():
+        assert out == want[rid]
+
+
+def test_serving_grow_reslot_token_identical(tmp_path):
+    """Serving's grow: after a shrink onto 1 slot, the recovered host
+    rejoins via ``grow`` and the live sessions re-slot back onto a
+    2-slot engine through the same elastic restore path — every request
+    still finishes token-identically."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = get_smoke_config("phi4-mini-3.8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(0, cfg.vocab_size, size=4) for _ in range(4)]
+
+    def fresh_requests():
+        return [Request(rid=i, prompt=p.copy(), max_new=5)
+                for i, p in enumerate(prompts)]
+
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    ref_eng = ServingEngine(cfg, params, mesh, n_slots=2, max_seq=32)
+    ref = fresh_requests()
+    for r in ref:
+        ref_eng.submit(r)
+    ref_eng.run_until_drained(max_steps=200)
+    want = {r.rid: list(r.out) for r in ref}
+
+    mgr = CheckpointManager(LocalFSBackend(str(tmp_path)), async_save=False)
+    eng = ServingEngine.create("phi4-mini-3.8b-smoke", params, (1, 1),
+                               n_slots=2, max_seq=32, manager=mgr)
+    reqs = fresh_requests()
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    eng.snapshot(block=True)
+
+    def restore(target):
+        return ServingEngine.restore(mgr, params,
+                                     n_slots=len(target.hosts),
+                                     step=target.step)
+
+    sup, w = _make([0, 1], mgr, eng, restore=restore, n_shards=None)
+    target = _drive_to_death(sup, w, dead_host=1, step=4)
+    assert target.action is FailureAction.SHRINK
+    eng2 = sup.runner
+    assert eng2.n_slots == 1
+
+    if any(eng2.slot_req) or eng2.queue:
+        eng2.step()                      # progress on the small engine
+    eng2.snapshot(block=True)            # what the grow resumes from
+    sup.policy.spares.append(1)          # the host recovered
+    gt = sup.grow()
+    assert gt.action is FailureAction.GROW
+    assert gt.hosts == [0, 1]
+    eng3 = sup.runner
+    assert eng3.n_slots == 2             # slots expanded back
+
+    finished = {r.rid: list(r.out) for r in reqs if r.done}
+    finished.update({r.rid: list(r.out)
+                     for r in eng2.live_requests() if r.done})
+    live = eng3.live_requests()
+    eng3.run_until_drained(max_steps=200)
     for r in live:
         assert r.done and r.out == want[r.rid], (r.rid, r.out, want[r.rid])
     for rid, out in finished.items():
